@@ -1,0 +1,262 @@
+"""Benchmark harness: one function per paper table/figure + framework perf.
+
+Prints CSV sections:
+  * paper figures: model-vs-paper success-rate deltas (the reproduction
+    scorecard; closed-form calibrated model + Monte-Carlo spot checks),
+  * in-DRAM vs CPU cost model (the paper's motivation, Table-style),
+  * kernel micro-benchmarks (packed-op throughput on this host),
+  * PuD-engine offload accounting on LM workloads.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def _p(*args):
+    print(*args, flush=True)
+
+
+def _csv(name, rows, header):
+    _p(f"\n== {name} ==")
+    _p(header)
+    for r in rows:
+        _p(",".join(str(x) for x in r))
+
+
+def fig5_coverage():
+    from repro.core import charz
+    d = charz.fig5_activation_coverage()
+    rows = [(k, round(100 * d["model"].get(k, 0.0), 3),
+             round(100 * v, 3),
+             round(100 * (d["model"].get(k, 0.0) - v), 3))
+            for k, v in d["paper"].items()]
+    _csv("Fig5 activation-type coverage (%)", rows,
+         "type,model,paper,delta")
+
+
+def fig7_not(mc=False):
+    from repro.core import charz
+    d = charz.fig7_not_vs_dst_rows(mc=mc, trials=60)
+    rows = []
+    for k, v in d.items():
+        if k == "paper":
+            continue
+        paper = d["paper"].get(k, "")
+        rows.append((k, round(100 * v["closed_form"], 2),
+                     round(100 * v.get("monte_carlo", float("nan")), 2)
+                     if mc else "",
+                     round(100 * paper, 2) if paper else ""))
+    _csv("Fig7 NOT success vs #destination rows (%)", rows,
+         "n_dst,closed_form,monte_carlo,paper")
+
+
+def fig8_patterns():
+    from repro.core import charz
+    d = charz.fig8_not_activation_patterns()
+    rows = [(k, round(100 * v, 2)) for k, v in d.items()
+            if ":" in str(k)]
+    rows.append(("n2n_advantage", round(100 * d["n2n_advantage"], 2)))
+    rows.append(("paper_n2n_advantage",
+                 round(100 * d["paper_n2n_advantage"], 2)))
+    _csv("Fig8 NOT success by activation type (%)", rows, "type,success")
+
+
+def fig9_distance():
+    from repro.core import charz
+    d = charz.fig9_not_distance_heatmap()
+    rows = [(k, round(100 * v, 2)) for k, v in d.items()]
+    _csv("Fig9 NOT success by (src,dst) distance region (%)", rows,
+         "src-dst,success")
+
+
+def fig10_12_not_modifiers():
+    from repro.core import charz
+    d = charz.fig10_not_temperature()
+    rows = [(n, *[round(100 * d[n][t], 2) for t in (50, 60, 70, 80, 95)])
+            for n in d]
+    _csv("Fig10 NOT success vs temperature (%)", rows,
+         "n_dst,50C,60C,70C,80C,95C")
+    d = charz.fig11_not_speed()
+    rows = [(n, *[round(100 * d[n][s], 2) for s in (2133, 2400, 2666)])
+            for n in d]
+    _csv("Fig11 NOT success vs speed grade (%)", rows,
+         "n_dst,2133,2400,2666")
+    d = charz.fig12_not_die_revision()
+    _csv("Fig12 NOT success by module (%)",
+         [(k, round(100 * v, 2)) for k, v in d.items()], "module,success")
+
+
+def fig15_ops(mc=False):
+    from repro.core import charz
+    d = charz.fig15_ops_vs_inputs(mc=mc, trials=40)
+    rows = []
+    for op in ("and", "nand", "or", "nor"):
+        for n in (2, 4, 8, 16):
+            cell = d[op][n]
+            paper = d["paper_16"][op] if n == 16 else ""
+            rows.append((op, n, round(100 * cell["closed_form"], 2),
+                         round(100 * cell.get("monte_carlo", float("nan")),
+                               2) if mc else "",
+                         round(100 * paper, 2) if paper else ""))
+    _csv("Fig15 op success vs #inputs (%)", rows,
+         "op,n,closed_form,monte_carlo,paper16")
+
+
+def fig16_kdep():
+    from repro.core import charz
+    d = charz.fig16_k_dependence()
+    rows = [(k, *[round(100 * x, 1) for x in v]) for k, v in d.items()]
+    _csv("Fig16 success vs #logic-1 operands (%)", rows, "op,k=0..n")
+
+
+def fig17_21_op_modifiers():
+    from repro.core import charz
+    d = charz.fig17_ops_distance_heatmap()
+    rows = []
+    for op in ("and", "nand", "or", "nor"):
+        rows.append((op, round(100 * d[op]["spread"], 2),
+                     round(100 * d["paper_spread"][op], 2)))
+    _csv("Fig17 op distance-spread (max-min, %)", rows,
+         "op,model,paper")
+    d = charz.fig18_data_pattern()
+    rows = [(op, round(100 * d[op]["avg_delta"], 2),
+             round(100 * d["paper_avg_delta"][op], 2))
+            for op in ("and", "nand", "or", "nor")]
+    _csv("Fig18 data-pattern delta all01-random (%)", rows,
+         "op,model,paper")
+    d = charz.fig19_ops_temperature()
+    rows = [(op, round(100 * d[op]["max_delta"], 2),
+             round(100 * d["paper_max_delta"][op], 2))
+            for op in ("and", "nand", "or", "nor")]
+    _csv("Fig19 op max temperature delta 50->95C (%)", rows,
+         "op,model,paper")
+    d = charz.fig20_ops_speed()
+    nand4 = d["nand"][4]
+    rows = [("nand4_2133_minus_2400",
+             round(100 * (nand4[2133] - nand4[2400]), 2),
+             round(100 * d["paper_nand4_2133_2400"], 2))]
+    _csv("Fig20 op speed effect (%)", rows, "metric,model,paper")
+    d = charz.fig21_ops_die_revision()
+    rows = [(mod, round(100 * d[mod]["and"][2], 2)) for mod in d]
+    _csv("Fig21 2-input AND by die (%)", rows, "module,success")
+
+
+def calibration_scorecard():
+    from repro.core import analog as A
+    from repro.core import calibrate as C
+    res = C.residuals(A.DEFAULT_PARAMS)
+    rows = [(k, p, round(m, 2), round(d, 2))
+            for k, (p, m, d) in sorted(res.items())]
+    _csv("Calibration scorecard (every quantified paper claim)", rows,
+         "claim,paper,model,delta")
+    worst = max(abs(d) for _p_, _m, d in res.values())
+    n_tight = sum(1 for _p_, _m, d in res.values() if abs(d) <= 1.5)
+    _p(f"claims={len(res)} within1.5pts={n_tight} worst_delta={worst:.2f}")
+
+
+def cost_model_table():
+    """The paper's motivation: in-DRAM bulk ops vs processor-centric."""
+    from repro.core.isa import CostModel
+    cm = CostModel()
+    rows = []
+    for n in (2, 4, 8, 16):
+        d = cm.boolean(n)
+        c = cm.cpu_baseline(n)
+        rows.append((n, round(d.time_ns, 1), round(c.time_ns, 1),
+                     round(d.energy_pj / 1e3, 2), round(c.energy_pj / 1e3, 2),
+                     round(c.energy_pj / d.energy_pj, 1),
+                     d.bus_bytes, c.bus_bytes))
+    _csv("In-DRAM vs CPU per-row bulk op (8KB row)", rows,
+         "n_inputs,dram_ns,cpu_ns,dram_nJ,cpu_nJ,energy_ratio,"
+         "dram_bus_B,cpu_bus_B")
+
+
+def reliability_planning():
+    from repro.core import reliability as R
+    rows = []
+    for op, n in (("and", 2), ("and", 16), ("nand", 16), ("or", 16)):
+        pl = R.plan(op, n, 0.999999)
+        rows.append((op, n, pl.replicas, round(100 * pl.p_raw, 2),
+                     f"{pl.p_final:.8f}", pl.ops_total))
+    _csv("Redundancy planning to 1e-6 error (best placement)", rows,
+         "op,n,replicas,p_raw,p_final,native_ops")
+
+
+def kernel_microbench(fast=False):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    reps = 3 if fast else 10
+    rows = []
+
+    def bench(name, fn, *args, bits):
+        fn(*args)  # warm
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args))
+        dt = (time.time() - t0) / reps
+        rows.append((name, round(dt * 1e3, 3),
+                     round(bits / dt / 1e9, 2)))
+
+    p16 = jnp.asarray(rng.integers(0, 2 ** 32, (16, 64, 512),
+                                   dtype=np.uint32))
+    bench("nary_and_16x64x512", lambda x: ops.nary_bitwise(x, "and"), p16,
+          bits=16 * 64 * 512 * 32)
+    a = jnp.asarray(rng.integers(0, 2 ** 32, (8, 64, 512), dtype=np.uint32))
+    bench("adder_8plane", lambda x: ops.add_planes(x, x), a,
+          bits=8 * 64 * 512 * 32)
+    x = jnp.asarray(rng.integers(0, 2 ** 32, (256, 64), dtype=np.uint32))
+    w = jnp.asarray(rng.integers(0, 2 ** 32, (256, 64), dtype=np.uint32))
+    bench("popcount_gemm_256x256x2048",
+          lambda a_, b_: ops.popcount_gemm(a_, b_, kind="xnor"), x, w,
+          bits=256 * 256 * 2048 * 2)
+    _csv("Kernel micro-bench (interpret-mode on CPU; TPU is the target)",
+         rows, "kernel,ms_per_call,Gbit/s")
+
+
+def pud_offload_lm():
+    """PuD-engine offload accounting on LM mask/dedup workloads."""
+    import jax.numpy as jnp
+    from repro.pud.engine import PudEngine
+    from repro.pud import masks as M
+    eng = PudEngine("jnp")
+    M.compose_attention_mask(eng, 4096, window=1024,
+                             doc_ids=jnp.zeros(4096, jnp.int32))
+    gate = jnp.asarray(np.random.default_rng(0).integers(0, 60, (8192, 4)))
+    M.route_mask_planes(eng, gate, 60)
+    rep = eng.report.summary()
+    rows = [(k, round(v, 4) if isinstance(v, float) else v)
+            for k, v in rep.items()]
+    _csv("PuD offload report (mask composition + MoE routing)", rows,
+         "metric,value")
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    mc = not fast
+    t0 = time.time()
+    _p("# FCDRAM-JAX benchmark suite (one section per paper figure)")
+    fig5_coverage()
+    fig7_not(mc=mc)
+    fig8_patterns()
+    fig9_distance()
+    fig10_12_not_modifiers()
+    fig15_ops(mc=mc)
+    fig16_kdep()
+    fig17_21_op_modifiers()
+    calibration_scorecard()
+    cost_model_table()
+    reliability_planning()
+    kernel_microbench(fast=fast)
+    pud_offload_lm()
+    _p(f"\ntotal {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Reproduce the paper's characterization campaign on the simulator.
+
+Runs the Monte-Carlo twin of the paper's DRAM Bender methodology for a
+subset of figures and prints model-vs-paper tables.  (The closed-form
+variants of every figure run in benchmarks/run.py.)
+
+Run: PYTHONPATH=src python examples/characterize.py
+"""
+from repro.core import charz
+
+print("Fig 7 - NOT success vs destination rows (Monte-Carlo, 40 trials)")
+d = charz.fig7_not_vs_dst_rows(mc=True, trials=40)
+for n in (1, 2, 4, 8):
+    row = d[n]
+    print(f"  {n:2d} dst: closed {100 * row['closed_form']:6.2f}%  "
+          f"MC {100 * row['monte_carlo']:6.2f}%")
+
+print("\nFig 15 - 16-input ops (Monte-Carlo, 25 trials)")
+d = charz.fig15_ops_vs_inputs(mc=True, trials=25)
+for op in ("and", "nand", "or", "nor"):
+    c = d[op][16]
+    print(f"  {op.upper():4s}: closed {100 * c['closed_form']:6.2f}%  "
+          f"MC {100 * c['monte_carlo']:6.2f}%  "
+          f"paper {100 * d['paper_16'][op]:.2f}%")
+
+print("\nObs 3 - per-cell NOT success map (perfect cells exist)")
+m = charz.measure_cell_map_not(trials=120, row_bits=1024)
+import numpy as np
+print(f"  cells: {m.size}, mean {100 * m.mean():.2f}%, "
+      f"100%-cells: {int((m >= 1.0).sum())}, "
+      f"<50%-cells: {int((m < 0.5).sum())}")
+
+print("\nredundancy planning (repro.core.reliability)")
+from repro.core import reliability as R
+for op, n in (("and", 16), ("nand", 2)):
+    pl = R.plan(op, n, 0.9999)
+    print(f"  {op}{n}: raw {100 * pl.p_raw:.2f}% -> {pl.replicas} replicas "
+          f"@ best placement -> {100 * pl.p_final:.4f}%")

@@ -1,0 +1,27 @@
+"""End-to-end driver: train a ~100M-parameter qwen3-family model for a few
+hundred steps on the synthetic pipeline, with checkpoints and resume.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(~100M params is CPU-heavy; the default uses a narrower variant. Pass
+--full100m for the real thing on a beefier host.)
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]]  # defer to repro.launch.train's own CLI below
+
+from repro.launch import train as TR  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full100m", action="store_true")
+    args, _ = ap.parse_known_args()
+    argv = ["--arch", "qwen3-4b", "--steps", str(args.steps),
+            "--out", "/tmp/fcdram_train_lm", "--batch", "16",
+            "--seq", "128", "--microbatches", "2",
+            "--compression", "int8_ef"]
+    if not args.full100m:
+        argv.append("--smoke")
+    sys.argv = [sys.argv[0]] + argv
+    TR.main()

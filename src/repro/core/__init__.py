@@ -1,0 +1,16 @@
+"""FCDRAM core: the paper's contribution as a simulatable, calibrated model.
+
+Layers (bottom-up):
+  device     — DDR4 timings, open-bitline geometry, Table-1 module zoo
+  analog     — calibrated charge-sharing + sense-amp reliability model
+  decoder    — hierarchical row-decoder activation model (Fig. 5)
+  simulator  — command-level functional + Monte-Carlo bank simulator
+  isa        — PuD instructions: row allocation, op scheduling, cost model
+  compiler   — Boolean expressions / bit-serial arithmetic -> PuD programs
+  reliability— redundancy / placement planning to target success rates
+  charz      — characterization harness reproducing the paper's figures
+  calibrate  — fits the analog model to every quantified paper claim
+"""
+from . import analog, decoder, device  # noqa: F401
+from .analog import AnalogParams, DEFAULT_PARAMS  # noqa: F401
+from .device import MODULE_ZOO, get_module  # noqa: F401

@@ -1,0 +1,300 @@
+"""Characterization harness: reproduces every experiment of the paper.
+
+Each ``fig*`` function mirrors one figure/observation of the paper and
+returns plain dicts (consumed by ``benchmarks/`` which prints CSV +
+model-vs-paper deltas).  Two evaluation paths:
+
+* closed-form (default): the calibrated ``repro.core.analog`` model,
+* Monte-Carlo (``mc=True``): actual command-level trials on
+  :class:`~repro.core.simulator.BankSim` through the ISA, per-cell success
+  over ``trials`` repetitions — the software twin of the paper's
+  10,000-trial DRAM Bender methodology.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import analog as A
+from . import decoder as DEC
+from .analog import CLOSE, FAR, MIDDLE
+from .device import MODULE_ZOO, get_module
+from .isa import PudIsa
+from .simulator import BankSim
+
+REGION_NAMES = {CLOSE: "close", MIDDLE: "middle", FAR: "far"}
+OPS = ("and", "nand", "or", "nor")
+NS = (2, 4, 8, 16)
+NOT_DSTS = (1, 2, 4, 8, 16, 32)
+TEMPS = (50, 60, 70, 80, 95)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo measurement through the full simulator stack
+# ---------------------------------------------------------------------------
+def mc_boolean_success(op: str, n: int, *, trials: int = 200,
+                       row_bits: int = 2048, seed: int = 0,
+                       module: str | None = None,
+                       temp_c: float = 50.0) -> float:
+    """Cell-averaged MC success of an n-input op on the noisy simulator."""
+    sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
+                  temp_c=temp_c, error_model="analog")
+    isa = PudIsa(sim)
+    rng = np.random.default_rng(seed + 1)
+    ok = 0
+    tot = 0
+    for _t in range(trials):
+        ops = [rng.integers(0, 2, isa.width).astype(np.uint8)
+               for _ in range(n)]
+        got = isa.nary_op(op, ops)
+        if A._base_op(op)[0] == "and":
+            want = np.bitwise_and.reduce(ops)
+        else:
+            want = np.bitwise_or.reduce(ops)
+        if A._base_op(op)[1]:
+            want = 1 - want
+        ok += int(np.sum(got == want))
+        tot += isa.width
+    return ok / tot
+
+
+def mc_not_success(n_dst: int = 1, *, trials: int = 200, row_bits: int = 2048,
+                   seed: int = 0, module: str | None = None) -> float:
+    sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
+                  error_model="analog")
+    isa = PudIsa(sim)
+    rng = np.random.default_rng(seed + 1)
+    ok = 0
+    tot = 0
+    for _t in range(trials):
+        bits = rng.integers(0, 2, isa.width).astype(np.uint8)
+        got = isa.op_not(bits, n_dst=n_dst)
+        ok += int(np.sum(got == 1 - bits))
+        tot += isa.width
+    return ok / tot
+
+
+def measure_cell_map(op: str, n: int, *, trials: int = 300,
+                     row_bits: int = 2048, seed: int = 0) -> np.ndarray:
+    """Per-cell success map (the paper's per-cell 10k-trial protocol)."""
+    sim = BankSim(get_module(), row_bits=row_bits, seed=seed,
+                  error_model="analog")
+    isa = PudIsa(sim)
+    rng = np.random.default_rng(seed + 1)
+    hits = np.zeros(isa.width, dtype=np.int64)
+    for _t in range(trials):
+        ops = [rng.integers(0, 2, isa.width).astype(np.uint8)
+               for _ in range(n)]
+        got = isa.nary_op(op, ops, pair_index=0)
+        if A._base_op(op)[0] == "and":
+            want = np.bitwise_and.reduce(ops)
+        else:
+            want = np.bitwise_or.reduce(ops)
+        if A._base_op(op)[1]:
+            want = 1 - want
+        hits += (got == want)
+    return hits / trials
+
+
+# ---------------------------------------------------------------------------
+# One function per paper figure
+# ---------------------------------------------------------------------------
+def measure_cell_map_not(*, trials: int = 200, row_bits: int = 2048,
+                         seed: int = 0) -> np.ndarray:
+    """Per-cell NOT success map (Obs. 3: some cells are 100%-reliable)."""
+    sim = BankSim(get_module(), row_bits=row_bits, seed=seed,
+                  error_model="analog")
+    isa = PudIsa(sim)
+    rng = np.random.default_rng(seed + 1)
+    hits = np.zeros(isa.width, dtype=np.int64)
+    for _t in range(trials):
+        bits = rng.integers(0, 2, isa.width).astype(np.uint8)
+        got = isa.op_not(bits, n_dst=1, pair_index=0)
+        hits += (got == 1 - bits)
+    return hits / trials
+
+
+def fig5_activation_coverage(module: str | None = None, seed: int = 0) -> dict:
+    """Coverage of each N_RF:N_RL activation type (Fig. 5)."""
+    m = get_module(module) if module else get_module()
+    got = DEC.coverage(m, seed=seed)
+    paper = {f"{a}:{b}": c for (a, b), c in DEC.FIG5_COVERAGE}
+    return {"model": got, "paper": paper}
+
+
+def fig7_not_vs_dst_rows(mc: bool = False, trials: int = 100) -> dict:
+    out = {}
+    for d in NOT_DSTS:
+        pattern = "NN" if d == 1 else "N2N"
+        closed = A.not_success(d, pattern=pattern)
+        row = {"closed_form": closed}
+        if mc:
+            row["monte_carlo"] = mc_not_success(d, trials=trials)
+        out[d] = row
+    out["paper"] = {1: 0.9837, 32: 0.0795}
+    return out
+
+
+def fig8_not_activation_patterns() -> dict:
+    """NOT success per N_RF:N_RL type (Obs. 5)."""
+    out = {}
+    for n in (1, 2, 4, 8, 16):
+        out[f"{n}:{n}"] = A.not_success(n, pattern="NN")
+        if n >= 1:
+            out[f"{n}:{2*n}"] = A.not_success(2 * n, pattern="N2N")
+    adv = float(np.mean([A.not_success(d, pattern="N2N")
+                         - A.not_success(d, pattern="NN")
+                         for d in (2, 4, 8, 16)]))
+    out["n2n_advantage"] = adv
+    out["paper_n2n_advantage"] = 0.0941
+    return out
+
+
+def fig9_not_distance_heatmap() -> dict:
+    """NOT success by (src region, dst region) (Obs. 6)."""
+    grid = {}
+    for rs in (CLOSE, MIDDLE, FAR):
+        for rd in (CLOSE, MIDDLE, FAR):
+            vals = [A.not_success(1, pattern="NN", src_region=rs,
+                                  dst_region=rd)]
+            vals += [A.not_success(d, pattern="N2N", src_region=rs,
+                                   dst_region=rd) for d in (2, 4, 8, 16, 32)]
+            grid[f"{REGION_NAMES[rs]}-{REGION_NAMES[rd]}"] = float(np.mean(vals))
+    grid["paper_middle-far"] = 0.8502
+    grid["paper_far-close"] = 0.4416
+    return grid
+
+
+def fig10_not_temperature() -> dict:
+    out = {}
+    for d in NOT_DSTS:
+        pattern = "NN" if d == 1 else "N2N"
+        out[d] = {t: A.not_success(d, pattern=pattern, temp_c=t)
+                  for t in TEMPS}
+    return out
+
+
+def fig11_not_speed() -> dict:
+    out = {}
+    for d in (1, 2, 4, 8):
+        out[d] = {s: A.not_success(d, pattern="NN" if d == 1 else "N2N",
+                                   speed_mts=s)
+                  for s in (2133, 2400, 2666)}
+    return out
+
+
+def fig12_not_die_revision() -> dict:
+    out = {}
+    for name, m in MODULE_ZOO.items():
+        if not m.supports_not:
+            continue
+        out[name] = A.not_success(
+            1, pattern="NN", mfr=m.manufacturer.value,
+            density_gb=m.density_gb, die_rev=m.die_rev,
+            speed_mts=m.speed_mts)
+    return out
+
+
+def fig15_ops_vs_inputs(mc: bool = False, trials: int = 60) -> dict:
+    out = {}
+    for op in OPS:
+        row = {}
+        for n in NS:
+            cell = {"closed_form": A.boolean_success_avg(op, n)}
+            if mc:
+                cell["monte_carlo"] = mc_boolean_success(op, n, trials=trials)
+            row[n] = cell
+        out[op] = row
+    out["paper_16"] = {"and": 0.9494, "nand": 0.9494, "or": 0.9585,
+                       "nor": 0.9587}
+    return out
+
+
+def fig16_k_dependence() -> dict:
+    out = {}
+    for op, n in (("and", 4), ("and", 16), ("or", 4), ("or", 16)):
+        ks = np.arange(n + 1)
+        out[f"{op}{n}"] = A.boolean_success(op, n, ks).tolist()
+    return out
+
+
+def fig17_ops_distance_heatmap() -> dict:
+    out = {}
+    for op in OPS:
+        grid = {}
+        for rc in (CLOSE, MIDDLE, FAR):
+            for rr in (CLOSE, MIDDLE, FAR):
+                s = float(np.mean([A.boolean_success_avg(
+                    op, n, compute_region=rc, ref_region=rr) for n in NS]))
+                grid[f"{REGION_NAMES[rc]}-{REGION_NAMES[rr]}"] = s
+        vals = list(grid.values())
+        grid["spread"] = max(vals) - min(vals)
+        out[op] = grid
+    out["paper_spread"] = {"and": 0.2336, "nand": 0.2370, "or": 0.1042,
+                           "nor": 0.1050}
+    return out
+
+
+def fig18_data_pattern() -> dict:
+    out = {}
+    for op in OPS:
+        out[op] = {
+            n: {"all01": A.boolean_success_avg(op, n, random_pattern=False),
+                "random": A.boolean_success_avg(op, n, random_pattern=True)}
+            for n in NS}
+        out[op]["avg_delta"] = float(np.mean(
+            [out[op][n]["all01"] - out[op][n]["random"] for n in NS]))
+    out["paper_avg_delta"] = {"and": 0.0143, "nand": 0.0139, "or": 0.0198,
+                              "nor": 0.0197}
+    return out
+
+
+def fig19_ops_temperature() -> dict:
+    out = {}
+    for op in OPS:
+        out[op] = {n: {t: A.boolean_success_avg(op, n, temp_c=t)
+                       for t in TEMPS} for n in NS}
+        out[op]["max_delta"] = max(
+            abs(out[op][n][95] - out[op][n][50]) for n in NS)
+    out["paper_max_delta"] = {"and": 0.0166, "nand": 0.0165, "or": 0.0163,
+                              "nor": 0.0164}
+    return out
+
+
+def fig20_ops_speed() -> dict:
+    out = {}
+    for op in OPS:
+        out[op] = {n: {s: A.boolean_success_avg(op, n, speed_mts=s)
+                       for s in (2133, 2400, 2666)} for n in NS}
+    out["paper_nand4_2133_2400"] = 0.2989
+    return out
+
+
+def fig21_ops_die_revision() -> dict:
+    out = {}
+    for dens, rev in ((4, "A"), (4, "M"), (8, "A"), (8, "M")):
+        out[f"hynix_{dens}gb_{rev}"] = {
+            op: {n: A.boolean_success_avg(op, n, density_gb=dens, die_rev=rev)
+                 for n in NS} for op in OPS}
+    return out
+
+
+def observation3_perfect_cells(trials: int = 300) -> dict:
+    """Obs. 3: existence of 100%-success cells (MC, per-cell map)."""
+    m = measure_cell_map("and", 4, trials=trials)
+    return {
+        "n_cells": int(m.size),
+        "perfect_cells": int(np.sum(m >= 1.0)),
+        "zero_cells": int(np.sum(m <= 0.0)),
+        "mean": float(m.mean()),
+    }
+
+
+def takeaway_tables() -> dict:
+    """The four headline numbers of the abstract."""
+    return {
+        "not_1dst": {"model": A.not_success(1), "paper": 0.9837},
+        "nand16": {"model": A.boolean_success_avg("nand", 16), "paper": 0.9494},
+        "nor16": {"model": A.boolean_success_avg("nor", 16), "paper": 0.9587},
+        "and16": {"model": A.boolean_success_avg("and", 16), "paper": 0.9494},
+        "or16": {"model": A.boolean_success_avg("or", 16), "paper": 0.9585},
+    }

@@ -1,0 +1,379 @@
+"""PuD instruction set: row allocation, op scheduling, and cost accounting.
+
+Bridges the raw APA mechanism (``repro.core.simulator``) and the Boolean
+expression compiler (``repro.core.compiler``):
+
+* :class:`PairInventory` — per (module, seed) table of which ``(R_F, R_L)``
+  address pairs realize each ``N_RF:N_RL`` activation type (the software
+  equivalent of the paper's reverse-engineering sweep, §4.2).
+* :class:`PudIsa` — executes logical PuD instructions (NOT / many-input
+  AND / OR / NAND / NOR, RowClone staging, Frac) on a :class:`BankSim`
+  subarray pair, handling operand staging, reference-row initialization,
+  half-row (open-bitline) data layout and result extraction.
+* :class:`CostModel` — DDR4 command-level latency/energy of each logical op
+  (the paper's motivation quantified: in-DRAM ops move no data over the bus).
+
+Data layout: a logical PuD *word* is ``shared_w = row_bits/2`` bits wide
+(footnote 6: inter-subarray ops compute on half a row).  Words on the
+compute (R_L) side occupy even columns; on the reference (R_F) side, odd
+columns.  ``PudIsa`` packs/unpacks transparently.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+import numpy as np
+
+from . import decoder as DEC
+from .analog import ALL_OPS, _base_op
+from .device import (ENERGY_PJ, ModuleConfig, get_module, timings_for,
+                     VIOLATED_TRAS_NS, VIOLATED_TRP_NS)
+from .simulator import BankSim
+
+
+# ---------------------------------------------------------------------------
+# Pair inventory
+# ---------------------------------------------------------------------------
+class PairInventory:
+    """All (R_F row, R_L row) pairs per activation type for a subarray pair.
+
+    Built once per (module, seed) by evaluating the decoder hash over the
+    full address cross product — the software twin of the paper's 409,600-
+    combination reverse-engineering sweep.
+    """
+
+    def __init__(self, module: ModuleConfig, *, seed: int = 0):
+        self.module = module
+        self.seed = seed
+        n = module.geometry.rows_per_subarray
+        pairs: dict[tuple[int, int], list[tuple[int, int]]] = {}
+        # vectorized category per pair (mirrors decoder.coverage)
+        M = np.uint64(0xFFFFFFFFFFFFFFFF)
+        rf = np.arange(n, dtype=np.uint64)[:, None]
+        rl = np.arange(n, dtype=np.uint64)[None, :]
+        with np.errstate(over="ignore"):
+            x = (np.uint64(seed) * np.uint64(0x9E3779B97F4A7C15) + rf)
+            for sh, mul in ((30, 0xBF58476D1CE4E5B9), (27, 0x94D049BB133111EB)):
+                x = ((x ^ (x >> np.uint64(sh))) * np.uint64(mul)) & M
+            x ^= x >> np.uint64(31)
+            y = (rl * np.uint64(0xD6E8FEB86659FD93)) & M
+            h = x ^ y
+            for sh, mul in ((30, 0xBF58476D1CE4E5B9), (27, 0x94D049BB133111EB)):
+                h = ((h ^ (h >> np.uint64(sh))) * np.uint64(mul)) & M
+            h ^= h >> np.uint64(31)
+        u = (h >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+        cum, cats = DEC._category_table(module.max_simultaneous_rows,
+                                        module.supports_n2n)
+        idx = np.searchsorted(cum, u)
+        for i, cat in enumerate(cats):
+            fs, ls = np.nonzero(idx == i)
+            pairs.setdefault(cat, []).extend(zip(fs.tolist(), ls.tolist()))
+        self._pairs = {k: np.asarray(v, dtype=np.int64)
+                       for k, v in pairs.items()}
+
+    def pairs(self, n_rf: int, n_rl: int) -> np.ndarray:
+        """(P, 2) array of (R_F, R_L) rows realizing n_rf:n_rl activation."""
+        return self._pairs.get((n_rf, n_rl), np.zeros((0, 2), dtype=np.int64))
+
+    def choose(self, n_rf: int, n_rl: int, k: int = 0) -> tuple[int, int]:
+        ps = self.pairs(n_rf, n_rl)
+        if len(ps) == 0:
+            raise CapabilityError(
+                f"module {self.module.name} has no {n_rf}:{n_rl} pairs")
+        rf, rl = ps[k % len(ps)]
+        return int(rf), int(rl)
+
+    def coverage(self, n_rf: int, n_rl: int) -> float:
+        n = self.module.geometry.rows_per_subarray
+        return len(self.pairs(n_rf, n_rl)) / float(n * n)
+
+
+class CapabilityError(RuntimeError):
+    """The module cannot express the requested activation/op."""
+
+
+@lru_cache(maxsize=16)
+def _inventory(module_name: str, seed: int) -> PairInventory:
+    return PairInventory(get_module(module_name), seed=seed)
+
+
+def inventory_for(module: ModuleConfig, seed: int = 0) -> PairInventory:
+    return _inventory(module.name, seed)
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+@dataclass
+class OpCost:
+    time_ns: float = 0.0
+    energy_pj: float = 0.0
+    commands: int = 0
+    bus_bytes: int = 0           # data moved over the DDR bus (PuD avoids it)
+
+    def __add__(self, o: "OpCost") -> "OpCost":
+        return OpCost(self.time_ns + o.time_ns, self.energy_pj + o.energy_pj,
+                      self.commands + o.commands, self.bus_bytes + o.bus_bytes)
+
+    def scaled(self, k: float) -> "OpCost":
+        return OpCost(self.time_ns * k, self.energy_pj * k,
+                      int(self.commands * k), int(self.bus_bytes * k))
+
+
+class CostModel:
+    """DDR4 command-sequence costs of logical PuD ops (per bank).
+
+    All in-DRAM ops are row-granular: one op processes ``shared_w`` bits
+    (half a row per chip; x8 chips in lock-step process 8x that per rank).
+    """
+
+    def __init__(self, module: ModuleConfig | None = None):
+        self.module = module or get_module()
+        self.t = timings_for(self.module)
+
+    def _apa(self, n_rows: int, first_restored: bool) -> OpCost:
+        t = self.t
+        t_first = t.tRAS if first_restored else VIOLATED_TRAS_NS
+        return OpCost(t_first + VIOLATED_TRP_NS + t.tRAS + t.tRP,
+                      n_rows * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"], 3, 0)
+
+    def rowclone(self) -> OpCost:
+        t = self.t
+        return OpCost(t.tRAS + VIOLATED_TRP_NS + t.tRAS + t.tRP,
+                      2 * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"], 3, 0)
+
+    def frac(self) -> OpCost:
+        t = self.t
+        return OpCost(2 * (VIOLATED_TRAS_NS + t.tRP),
+                      2 * (ENERGY_PJ["act"] + ENERGY_PJ["pre"]), 4, 0)
+
+    def write_row(self) -> OpCost:
+        t = self.t
+        bts = self.module.geometry.row_bits // 8
+        n_bursts = max(bts // 64, 1)
+        return OpCost(t.tRCD + t.tWR + t.tRP + n_bursts * 4 * t.tCK,
+                      ENERGY_PJ["act"] + ENERGY_PJ["pre"]
+                      + n_bursts * (ENERGY_PJ["wr_per_64B"] + ENERGY_PJ["io_per_64B"]),
+                      2 + n_bursts, bts)
+
+    def read_row(self) -> OpCost:
+        t = self.t
+        bts = self.module.geometry.row_bits // 8
+        n_bursts = max(bts // 64, 1)
+        return OpCost(t.tRCD + t.tCL + t.tRP + n_bursts * 4 * t.tCK,
+                      ENERGY_PJ["act"] + ENERGY_PJ["pre"]
+                      + n_bursts * (ENERGY_PJ["rd_per_64B"] + ENERGY_PJ["io_per_64B"]),
+                      2 + n_bursts, bts)
+
+    def boolean(self, n: int, *, staged: bool = True,
+                ref_cached: bool = True) -> OpCost:
+        """N-input AND/OR/NAND/NOR.
+
+        staged: operands already reside in the compute block (the compiler
+        RowClones them in; counted separately).  ref_cached: the N-1 constant
+        reference rows persist across ops; only the Frac row is refreshed.
+        """
+        c = self._apa(2 * n, first_restored=False)
+        c = c + self.frac()                      # Frac re-store each op
+        if not ref_cached:
+            c = c + self.write_row().scaled(n - 1)
+        if not staged:
+            c = c + self.rowclone().scaled(n)
+        return c
+
+    def op_not(self, n_dst: int = 1) -> OpCost:
+        return self._apa(1 + n_dst, first_restored=True)
+
+    def cpu_baseline(self, n: int, rows: int = 1) -> OpCost:
+        """Processor-centric baseline: read N operand rows over the bus,
+        compute on CPU, write one result row back."""
+        c = self.read_row().scaled(n * rows) + self.write_row().scaled(rows)
+        bts = self.module.geometry.row_bits // 8
+        c.energy_pj += n * rows * (bts / 64.0) * ENERGY_PJ["cpu_op_per_64B"]
+        return c
+
+
+# ---------------------------------------------------------------------------
+# The ISA executor
+# ---------------------------------------------------------------------------
+@dataclass
+class IsaStats:
+    ops: int = 0
+    apas: int = 0
+    rowclones: int = 0
+    fracs: int = 0
+    writes: int = 0
+    reads: int = 0
+    cost: OpCost = field(default_factory=OpCost)
+
+
+class PudIsa:
+    """Executes logical PuD instructions on one subarray pair of a BankSim.
+
+    Convention: R_F side = ``f_sub`` (reference rows for Boolean ops, source
+    row for NOT); R_L side = ``l_sub = f_sub + 1`` (compute rows / NOT
+    destinations).  Logical words are ``shared_w`` bits.
+    """
+
+    def __init__(self, sim: BankSim, *, f_sub: int = 0, l_sub: int | None = None):
+        self.sim = sim
+        self.f_sub = f_sub
+        self.l_sub = f_sub + 1 if l_sub is None else l_sub
+        if abs(self.f_sub - self.l_sub) != 1:
+            raise ValueError("PudIsa needs neighboring subarrays")
+        self.inv = inventory_for(sim.module, sim.seed)
+        self.cost_model = CostModel(sim.module)
+        self.stats = IsaStats()
+        lo = min(self.f_sub, self.l_sub)
+        j = np.arange(sim.shared_w)
+        self._f_cols = 2 * j + 1 if self.f_sub == lo else 2 * j
+        self._l_cols = 2 * j + 1 if self.l_sub == lo else 2 * j
+        self._pair_cursor: dict[tuple[int, int], int] = {}
+
+    # ---------------- word packing ----------------
+    @property
+    def width(self) -> int:
+        return self.sim.shared_w
+
+    def _pack(self, bits: np.ndarray, side: str) -> np.ndarray:
+        cols = self._f_cols if side == "f" else self._l_cols
+        row = np.zeros(self.sim.geom.row_bits, dtype=np.float32)
+        row[cols] = np.asarray(bits, dtype=np.float32)
+        return row
+
+    def _unpack(self, sub: int, row: int, side: str) -> np.ndarray:
+        cols = self._f_cols if side == "f" else self._l_cols
+        full = self.sim.read_row(sub, row)
+        self.stats.reads += 1
+        self.stats.cost = self.stats.cost + self.cost_model.read_row()
+        return full[cols]
+
+    def write_word(self, sub: int, row: int, bits: np.ndarray) -> None:
+        side = "f" if sub == self.f_sub else "l"
+        self.sim.write_row(sub, row, self._pack(bits, side))
+        self.stats.writes += 1
+        self.stats.cost = self.stats.cost + self.cost_model.write_row()
+
+    def read_word(self, sub: int, row: int) -> np.ndarray:
+        side = "f" if sub == self.f_sub else "l"
+        return self._unpack(sub, row, side)
+
+    # ---------------- pair selection ----------------
+    def _next_pair(self, n_rf: int, n_rl: int) -> tuple[int, int]:
+        """Deterministic but *scrambled* pair iteration: consecutive ops use
+        pairs spread uniformly over the subarray (and hence over the
+        distance regions), matching the paper's row-sweeping protocol."""
+        key = (n_rf, n_rl)
+        k = self._pair_cursor.get(key, 0)
+        self._pair_cursor[key] = k + 1
+        n_pairs = max(len(self.inv.pairs(n_rf, n_rl)), 1)
+        scrambled = DEC._mix64(k * 0x9E3779B97F4A7C15 + self.sim.seed)
+        return self.inv.choose(n_rf, n_rl, scrambled % n_pairs)
+
+    # ---------------- logical ops ----------------
+    def op_not(self, bits: np.ndarray, *, n_dst: int = 1,
+               pair_index: int | None = None) -> np.ndarray:
+        """In-DRAM NOT: returns the (noisy) complement of ``bits``."""
+        # choose an activation whose R_L side has exactly n_dst rows and
+        # R_F side is the smallest available (least drive load, Obs. 5)
+        for n_rf in (max(n_dst // 2, 1), n_dst):
+            if len(self.inv.pairs(n_rf, n_dst)):
+                break
+        else:
+            raise CapabilityError(f"no activation with {n_dst} dst rows")
+        if pair_index is not None:
+            rf, rl = self.inv.choose(n_rf, n_dst, pair_index)
+        else:
+            rf, rl = self._next_pair(n_rf, n_dst)
+        act = DEC.activation_pattern(self.sim.module, rf, rl,
+                                     seed=self.sim.seed)
+        # stage source bits into every activated R_F row (they charge-share)
+        for r in act.rows_f:
+            self.sim.write_row(self.f_sub, r, self._pack(bits, "f"))
+            self.stats.writes += 1
+        self.sim.apa(self.sim.global_addr(self.f_sub, rf),
+                     self.sim.global_addr(self.l_sub, rl),
+                     first_act_restored=True)
+        self.stats.apas += 1
+        self.stats.ops += 1
+        self.stats.cost = self.stats.cost + self.cost_model.op_not(n_dst) \
+            + self.cost_model.write_row().scaled(act.n_rf)
+        out = self.sim.snapshot_rows(self.l_sub, [act.rows_l[0]])[0]
+        return out[self._l_cols]
+
+    def nary_op(self, op: str, operands: list[np.ndarray], *,
+                pair_index: int | None = None,
+                random_pattern: bool = True) -> np.ndarray:
+        """Many-input AND/OR/NAND/NOR over equal-width operand words.
+
+        The decoder only expresses power-of-two N:N activations; other
+        fan-ins are padded with identity operands (all-1 rows for AND,
+        all-0 for OR) up to the next supported N.
+        """
+        op = op.lower()
+        if op not in ALL_OPS:
+            raise ValueError(f"unknown op {op}")
+        n = len(operands)
+        if n < 2:
+            raise ValueError("n-ary op needs >= 2 operands")
+        if n > self.sim.module.max_inputs:
+            raise CapabilityError(
+                f"{n}-input ops exceed module capability "
+                f"({self.sim.module.max_inputs})")
+        base, is_ref = _base_op(op)
+        n_hw = n
+        while n_hw <= 16 and len(self.inv.pairs(n_hw, n_hw)) == 0:
+            n_hw += n_hw % 2 or 1   # next even, then doubles via pairs check
+        if len(self.inv.pairs(n_hw, n_hw)) == 0:
+            raise CapabilityError(f"no >= {n}:{n} pairs on this module")
+        if n_hw != n:
+            ident = np.full(self.width, 1 if base == "and" else 0,
+                            dtype=np.uint8)
+            operands = list(operands) + [ident] * (n_hw - n)
+            n = n_hw
+        if pair_index is not None:
+            rf, rl = self.inv.choose(n, n, pair_index)
+        else:
+            rf, rl = self._next_pair(n, n)
+        act = DEC.activation_pattern(self.sim.module, rf, rl,
+                                     seed=self.sim.seed)
+        assert act.n_rf == n and act.n_rl == n
+        # reference block: N-1 constants + one Frac row (§6.1.2)
+        const = 1.0 if base == "and" else 0.0
+        for r in act.rows_f[:-1]:
+            self.sim.write_row(self.f_sub, r,
+                               np.full(self.sim.geom.row_bits, const,
+                                       dtype=np.float32))
+            self.stats.writes += 1
+        self.sim.frac_row(self.f_sub, act.rows_f[-1])
+        self.stats.fracs += 1
+        # compute block: operands
+        for r, bits in zip(act.rows_l, operands):
+            self.sim.write_row(self.l_sub, r, self._pack(bits, "l"))
+            self.stats.writes += 1
+        self.sim.op_boolean(op, self.sim.global_addr(self.f_sub, rf),
+                            self.sim.global_addr(self.l_sub, rl),
+                            random_pattern=random_pattern)
+        self.stats.apas += 1
+        self.stats.ops += 1
+        self.stats.cost = self.stats.cost + self.cost_model.boolean(n)
+        if is_ref:   # NAND/NOR lands in the reference subarray rows
+            out = self.sim.snapshot_rows(self.f_sub, [act.rows_f[0]])[0]
+            return out[self._f_cols]
+        out = self.sim.snapshot_rows(self.l_sub, [act.rows_l[0]])[0]
+        return out[self._l_cols]
+
+    # composite ops (functional completeness in action) ------------------
+    def op_xor(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """XOR from 4 NANDs: the classic functionally-complete construction."""
+        n1 = self.nary_op("nand", [a, b])
+        n2 = self.nary_op("nand", [a, n1])
+        n3 = self.nary_op("nand", [b, n1])
+        return self.nary_op("nand", [n2, n3])
+
+    def op_maj3(self, a: np.ndarray, b: np.ndarray, c: np.ndarray) -> np.ndarray:
+        ab = self.nary_op("and", [a, b])
+        a_or_b = self.nary_op("or", [a, b])
+        c_ab = self.nary_op("and", [c, a_or_b])
+        return self.nary_op("or", [ab, c_ab])

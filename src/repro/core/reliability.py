@@ -1,0 +1,121 @@
+"""Reliability planning over the calibrated success-rate model.
+
+The paper characterizes *raw* success rates (94-98%): far too low for direct
+use as a compute substrate.  This module turns the characterization into an
+engineering tool, answering: *how do I execute op X at target reliability?*
+
+Strategies (composable):
+  1. **Placement** — choose (compute, reference) row regions with the best
+     margin offsets (Obs. 6/15: distance to the shared sense amplifiers).
+  2. **Operand count** — success *increases* with fan-in (Obs. 11), so wide
+     ops are preferred; the planner accounts for it.
+  3. **Modular redundancy** — replicate an op R times on *independent*
+     sense-amp stripes (different subarray pairs: the per-cell static offsets
+     are independent across stripes, not within one) and majority-vote
+     in-DRAM.  The visible error rate falls binomially.
+  4. **Cell steering** — the paper shows some cells are 100%-reliable
+     (Obs. 3); given a measured per-cell success map (from
+     ``charz.measure_cell_map``) the planner masks columns below threshold.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import analog as A
+from .analog import CLOSE, FAR, MIDDLE, AnalogParams
+
+
+REGIONS = (CLOSE, MIDDLE, FAR)
+
+
+def best_regions(op: str, n: int, *, p: AnalogParams | None = None,
+                 **kw) -> tuple[int, int, float]:
+    """-> (compute_region, ref_region, success) maximizing mean success."""
+    p = p or A.DEFAULT_PARAMS
+    best = None
+    for rc in REGIONS:
+        for rr in REGIONS:
+            s = A.boolean_success_avg(op, n, p=p, compute_region=rc,
+                                      ref_region=rr, **kw)
+            if best is None or s > best[2]:
+                best = (rc, rr, s)
+    return best
+
+
+def vote_success(p_bit: float, r: int) -> float:
+    """P(majority of r independent replicas is correct) per bit."""
+    if r == 1:
+        return p_bit
+    need = r // 2 + 1
+    return float(sum(math.comb(r, i) * p_bit ** i * (1 - p_bit) ** (r - i)
+                     for i in range(need, r + 1)))
+
+
+def vote_success_with_noisy_vote(p_bit: float, r: int, p_vote: float) -> float:
+    """Majority vote where the vote itself is computed with noisy in-DRAM
+    ops (MAJ3 = 4 native ops each with success p_vote)."""
+    ideal = vote_success(p_bit, r)
+    # the 4-op MAJ tree is correct iff all its ops are (pessimistic bound)
+    return ideal * p_vote ** 4 + (1 - p_vote ** 4) * 0.5
+
+
+@dataclass(frozen=True)
+class RedundancyPlan:
+    op: str
+    n: int
+    replicas: int
+    compute_region: int
+    ref_region: int
+    p_raw: float            # single-op per-bit success
+    p_final: float          # post-vote per-bit success
+    ops_total: int          # native APA ops incl. vote tree
+
+    @property
+    def overhead(self) -> float:
+        return self.ops_total / 1.0
+
+
+def plan(op: str, n: int, target: float, *, max_replicas: int = 9,
+         p: AnalogParams | None = None, noisy_vote: bool = True,
+         **kw) -> RedundancyPlan:
+    """Smallest odd replica count hitting ``target`` per-bit success."""
+    p = p or A.DEFAULT_PARAMS
+    rc, rr, p_raw = best_regions(op, n, p=p, **kw)
+    p_vote = A.boolean_success_avg("and", 2, p=p, compute_region=rc,
+                                   ref_region=rr, **kw)
+    for r in range(1, max_replicas + 1, 2):
+        pf = (vote_success_with_noisy_vote(p_raw, r, p_vote)
+              if (noisy_vote and r > 1) else vote_success(p_raw, r))
+        ops = r + (0 if r == 1 else 4 * (r // 2))   # MAJ3 cascade
+        if pf >= target:
+            return RedundancyPlan(op, n, r, rc, rr, p_raw, pf, ops)
+    return RedundancyPlan(op, n, max_replicas, rc, rr, p_raw,
+                          vote_success(p_raw, max_replicas),
+                          max_replicas + 4 * (max_replicas // 2))
+
+
+def cell_mask(success_map: np.ndarray, threshold: float = 0.999) -> np.ndarray:
+    """Column usability mask from a measured per-cell success map (Obs. 3:
+    a sizeable population of cells is effectively always-correct)."""
+    return np.asarray(success_map) >= threshold
+
+
+def usable_fraction(success_map: np.ndarray, threshold: float = 0.999) -> float:
+    return float(np.mean(cell_mask(success_map, threshold)))
+
+
+def effective_throughput(op: str, n: int, target: float,
+                         row_bits: int = 8192, *,
+                         p: AnalogParams | None = None, **kw) -> dict:
+    """Bits-per-APA delivered at target reliability, after redundancy."""
+    pl = plan(op, n, target, p=p, **kw)
+    w = row_bits // 2
+    return {
+        "plan": pl,
+        "raw_bits_per_apa": w,
+        "effective_bits_per_apa": w / max(pl.ops_total, 1),
+        "replicas": pl.replicas,
+    }

@@ -1,0 +1,401 @@
+"""Functional + analog Monte-Carlo simulator of a DRAM bank.
+
+Executes the paper's command sequences at cell granularity:
+
+* ``ACT -> (wait tRAS) -> PRE -> RD/WR`` — standard operation,
+* ``ACT R_F -> PRE -> ACT R_L`` (APA) with violated timings — simultaneous
+  multi-row activation in *neighboring* subarrays (§4); which rows activate
+  is decided by the :mod:`repro.core.decoder` model,
+* RowClone (sequential same-subarray activation, §2.2),
+* Frac (store VDD/2 in a row, FracDRAM [38]),
+* the NOT protocol (§5: first ACT fully restores the source before PRE ->
+  ACT dst) and the Boolean-op protocol (§6: both ACTs violated, reference
+  subarray first).
+
+Open-bitline geometry (footnote 6): the sense-amp stripe between neighboring
+subarrays ``lo`` / ``lo+1`` hosts one SA per *shared column position*
+``j``: terminal A connects to column ``2j+1`` of subarray ``lo`` and
+terminal B to column ``2j`` of subarray ``lo+1``.  Inter-subarray operations
+therefore compute on half a row; the remaining columns of an activated row
+see a plain same-subarray (dis)charge and are restored through their own
+stripe (a MAJ-against-VDD/2, which is what prior in-DRAM-compute works use).
+
+Error injection follows ``repro.core.analog``: each SA carries a *static*
+latent offset (two per-SA uniforms mapped through the op-context mixture, so
+a given cell behaves consistently across trials — the paper's bimodal
+box-plot populations and Obs. 3), plus per-trial noise and the
+activation-failure floor.  Cell-averaged Monte-Carlo success converges to the
+closed-form ``analog.boolean_success`` (tested in tests/test_simulator.py).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import analog as A
+from . import decoder as DEC
+from .analog import AnalogParams, MIDDLE
+from .device import (ActivationSupport, DRAMTimings, ModuleConfig,
+                     SubarrayGeometry, get_module, timings_for, ENERGY_PJ,
+                     VIOLATED_TRAS_NS, VIOLATED_TRP_NS)
+
+# fraction of the Gaussian sigma that is static (per-cell) vs per-trial
+STATIC_SPLIT = 0.8
+
+
+def _norm_ppf(q):
+    """Acklam's inverse normal CDF approximation (max abs err ~1.15e-9)."""
+    q = np.asarray(q, dtype=np.float64)
+    a = (-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00)
+    q = np.clip(q, 1e-12, 1 - 1e-12)
+    out = np.empty_like(q)
+    lo = q < 0.02425
+    hi = q > 1 - 0.02425
+    mid = ~(lo | hi)
+    if np.any(mid):
+        x = q[mid] - 0.5
+        r = x * x
+        out[mid] = ((((((a[0]*r+a[1])*r+a[2])*r+a[3])*r+a[4])*r+a[5])*x /
+                    (((((b[0]*r+b[1])*r+b[2])*r+b[3])*r+b[4])*r+1))
+    if np.any(lo):
+        r = np.sqrt(-2*np.log(q[lo]))
+        out[lo] = (((((c[0]*r+c[1])*r+c[2])*r+c[3])*r+c[4])*r+c[5]) / \
+                  ((((d[0]*r+d[1])*r+d[2])*r+d[3])*r+1)
+    if np.any(hi):
+        r = np.sqrt(-2*np.log(1-q[hi]))
+        out[hi] = -((((((c[0]*r+c[1])*r+c[2])*r+c[3])*r+c[4])*r+c[5]) /
+                    ((((d[0]*r+d[1])*r+d[2])*r+d[3])*r+1))
+    return out
+
+
+@dataclass
+class CommandLog:
+    """Per-command time/energy accounting (feeds the ISA cost model)."""
+
+    time_ns: float = 0.0
+    energy_pj: float = 0.0
+    counts: dict = field(default_factory=dict)
+
+    def add(self, cmd: str, t_ns: float, e_pj: float) -> None:
+        self.time_ns += t_ns
+        self.energy_pj += e_pj
+        self.counts[cmd] = self.counts.get(cmd, 0) + 1
+
+    def reset(self) -> None:
+        self.time_ns = 0.0
+        self.energy_pj = 0.0
+        self.counts.clear()
+
+
+class BankSim:
+    """One DRAM bank: lazily-allocated subarrays of float32 cell voltages."""
+
+    def __init__(self, module: ModuleConfig | str | None = None, *,
+                 row_bits: int | None = None, seed: int = 0,
+                 params: AnalogParams | None = None, temp_c: float = 50.0,
+                 error_model: str = "analog"):
+        self.module = (get_module(module) if isinstance(module, str)
+                       else module or get_module())
+        geom = self.module.geometry
+        if row_bits is not None:
+            geom = SubarrayGeometry(geom.subarrays_per_bank,
+                                    geom.rows_per_subarray, row_bits)
+        self.geom = geom
+        self.timings: DRAMTimings = timings_for(self.module)
+        self.params = params or A.DEFAULT_PARAMS
+        self.temp_c = temp_c
+        assert error_model in ("analog", "mean", "ideal", "none")
+        self.error_model = error_model
+        self.seed = seed
+        self._subarrays: dict[int, np.ndarray] = {}
+        self._static: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._trial = 0
+        self.log = CommandLog()
+
+    # ---------------- geometry helpers ----------------
+    @property
+    def shared_w(self) -> int:
+        return self.geom.row_bits // 2
+
+    def _arr(self, sub: int) -> np.ndarray:
+        if not 0 <= sub < self.geom.subarrays_per_bank:
+            raise IndexError(f"subarray {sub} out of range")
+        if sub not in self._subarrays:
+            self._subarrays[sub] = np.zeros(
+                (self.geom.rows_per_subarray, self.geom.row_bits),
+                dtype=np.float32)
+        return self._subarrays[sub]
+
+    def _static_latents(self, stripe: int) -> tuple[np.ndarray, np.ndarray]:
+        """Two per-SA uniforms for the static offset mixture of a stripe."""
+        if stripe not in self._static:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, 0xC0FFEE, stripe]))
+            self._static[stripe] = (rng.random(self.shared_w),
+                                    rng.random(self.shared_w))
+        return self._static[stripe]
+
+    def _rng(self) -> np.random.Generator:
+        self._trial += 1
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, 0x7A1A1, self._trial]))
+
+    def static_offsets(self, stripe: int, op: str, n: int, *,
+                       random_pattern: bool = True,
+                       speed_mts: int | None = None) -> np.ndarray:
+        """Per-SA static offset [V] under an op context (see module doc)."""
+        xi1, xi2 = self._static_latents(stripe)
+        s, b, wp, wm = A.op_noise(
+            op, n, self.params, temp_c=self.temp_c,
+            random_pattern=random_pattern,
+            speed_mts=speed_mts or self.module.speed_mts,
+            mfr=self.module.manufacturer.value,
+            density_gb=self.module.density_gb, die_rev=self.module.die_rev)
+        comp = np.where(xi1 < wm, -1.0, np.where(xi1 > 1.0 - wp, 1.0, 0.0))
+        return comp * b + STATIC_SPLIT * s * _norm_ppf(xi2)
+
+    # ---------------- standard commands ----------------
+    def write_row(self, sub: int, row: int, bits: np.ndarray) -> None:
+        arr = self._arr(sub)
+        bits = np.asarray(bits)
+        if bits.shape != (self.geom.row_bits,):
+            raise ValueError(f"row is {self.geom.row_bits} bits, got {bits.shape}")
+        arr[row] = bits.astype(np.float32)
+        t = self.timings
+        n_bursts = self.geom.row_bits // 512  # 64B bursts per chip-row
+        self.log.add("WR", t.tRCD + t.tWR + t.tRP,
+                     ENERGY_PJ["act"] + ENERGY_PJ["pre"]
+                     + n_bursts * ENERGY_PJ["wr_per_64B"])
+
+    def read_row(self, sub: int, row: int) -> np.ndarray:
+        arr = self._arr(sub)
+        t = self.timings
+        n_bursts = self.geom.row_bits // 512
+        self.log.add("RD", t.tRCD + t.tCL + t.tRP,
+                     ENERGY_PJ["act"] + ENERGY_PJ["pre"]
+                     + n_bursts * ENERGY_PJ["rd_per_64B"])
+        return (arr[row] > 0.5).astype(np.uint8)
+
+    def frac_row(self, sub: int, row: int) -> None:
+        """FracDRAM: store VDD/2 in every cell of the row."""
+        self._arr(sub)[row] = 0.5
+        t = self.timings
+        # Frac = ACT -> PRE with violated tRAS, twice (per FracDRAM)
+        self.log.add("FRAC", 2 * (VIOLATED_TRAS_NS + t.tRP),
+                     2 * (ENERGY_PJ["act"] + ENERGY_PJ["pre"]))
+
+    def rowclone(self, sub: int, src: int, dst: int) -> None:
+        """Same-subarray RowClone (sequential ACT -> PRE -> ACT)."""
+        arr = self._arr(sub)
+        arr[dst] = (arr[src] > 0.5).astype(np.float32)
+        arr[src] = (arr[src] > 0.5).astype(np.float32)  # restored
+        t = self.timings
+        self.log.add("RC", t.tRAS + VIOLATED_TRP_NS + t.tRAS + t.tRP,
+                     2 * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"])
+
+    # ---------------- APA: simultaneous multi-row activation ----------------
+    def _split_cols(self, f_sub: int, l_sub: int):
+        """-> (stripe id, f-side columns, l-side columns) for the shared SA
+        stripe between neighboring subarrays."""
+        if abs(f_sub - l_sub) != 1:
+            raise ValueError("APA requires *neighboring* subarrays")
+        lo = min(f_sub, l_sub)
+        j = np.arange(self.shared_w)
+        lo_cols, hi_cols = 2 * j + 1, 2 * j
+        f_cols = lo_cols if f_sub == lo else hi_cols
+        l_cols = lo_cols if l_sub == lo else hi_cols
+        return lo, f_cols, l_cols
+
+    def _resolve(self, margin: np.ndarray, stripe: int, op: str, n: int, *,
+                 regions: tuple[int, int], random_pattern: bool,
+                 rng: np.random.Generator) -> np.ndarray:
+        """Sense-amp comparator outcome (bool per shared column)."""
+        p = self.params
+        if self.error_model in ("ideal", "none", "mean"):
+            return margin > 0.0
+        dv = A.margin_offset(op, p, compute_region=regions[0],
+                             ref_region=regions[1],
+                             mfr=self.module.manufacturer.value,
+                             density_gb=self.module.density_gb,
+                             die_rev=self.module.die_rev)
+        s, _b, _wp, _wm = A.op_noise(
+            op, n, p, temp_c=self.temp_c, random_pattern=random_pattern,
+            speed_mts=self.module.speed_mts,
+            mfr=self.module.manufacturer.value,
+            density_gb=self.module.density_gb, die_rev=self.module.die_rev)
+        shift = A.op_shift(op, n, p)
+        static = self.static_offsets(stripe, op, n,
+                                     random_pattern=random_pattern)
+        trial = math.sqrt(max(1.0 - STATIC_SPLIT ** 2, 0.0)) * s \
+            * rng.standard_normal(margin.shape)
+        out = margin + dv - shift - p.delta_v + static + trial > 0.0
+        pf = A.op_pfloor(op, n, p, temp_c=self.temp_c,
+                         random_pattern=random_pattern,
+                         speed_mts=self.module.speed_mts)
+        flip = rng.random(margin.shape) < pf
+        coin = rng.random(margin.shape) < 0.5
+        return np.where(flip, coin, out)
+
+    def _maj_restore(self, sub: int, rows, cols: np.ndarray,
+                     rng: np.random.Generator) -> None:
+        """Same-subarray multi-row activation on non-shared columns: cells
+        charge-share against VDD/2 and the (other-stripe) SA restores the
+        majority value into all activated cells (prior works' MAJ)."""
+        arr = self._arr(sub)
+        n = len(rows)
+        u = A.u_n(n, self.params)
+        v = u * np.sum(arr[np.asarray(rows)][:, cols] - 0.5, axis=0)
+        if self.error_model == "analog":
+            s = self.params.sigma_sa
+            v = v + s * rng.standard_normal(v.shape)
+        out = (v > 0.0).astype(np.float32)
+        for r in rows:
+            arr[r, cols] = out
+
+    def apa(self, rf_global: int, rl_global: int, *,
+            first_act_restored: bool = False,
+            random_pattern: bool = True) -> DEC.Activation:
+        """``ACT R_F -> PRE -> ACT R_L`` with violated timings.
+
+        Global row address = subarray * rows_per_subarray + row.
+        ``first_act_restored=True`` models the NOT protocol (§5): the first
+        ACT waits full tRAS, so R_F's value is fully restored and then
+        *drives* the R_L rows through the shared SAs.  Otherwise both sides
+        charge-share from VDD/2 and the SA acts as a comparator (§6).
+        """
+        rps = self.geom.rows_per_subarray
+        f_sub, f_row = divmod(rf_global, rps)
+        l_sub, l_row = divmod(rl_global, rps)
+        act = DEC.activation_pattern(self.module, f_row, l_row, seed=self.seed)
+        t = self.timings
+        t_first = t.tRAS if first_act_restored else VIOLATED_TRAS_NS
+        self.log.add("APA", t_first + VIOLATED_TRP_NS + t.tRAS + t.tRP,
+                     (act.n_rf + act.n_rl) * ENERGY_PJ["act"]
+                     + 2 * ENERGY_PJ["pre"])
+        if act.n_rf == 0:
+            return act
+        if self.module.activation is ActivationSupport.SEQUENTIAL \
+                and not first_act_restored:
+            return act  # sequential activation cannot charge-share both sides
+        stripe, f_cols, l_cols = self._split_cols(f_sub, l_sub)
+        arr_f, arr_l = self._arr(f_sub), self._arr(l_sub)
+        rows_f = np.asarray(act.rows_f)
+        rows_l = np.asarray(act.rows_l)
+        rng = self._rng()
+        geom = self.geom
+        reg_f = geom.distance_region(f_row, toward_upper=f_sub > l_sub)
+        reg_l = geom.distance_region(l_row, toward_upper=l_sub > f_sub)
+
+        if first_act_restored:
+            # ---- NOT protocol: R_F drives, R_L receives the complement ----
+            n_src = act.n_rf
+            u = A.u_n(n_src, self.params)
+            v_src = 0.5 + u * np.sum(arr_f[rows_f][:, f_cols] - 0.5, axis=0)
+            src_bit = v_src > 0.5
+            if self.error_model == "analog":
+                p_ok = A.not_success(
+                    act.n_rl, pattern=("N2N" if act.kind == "N:2N" else "NN"),
+                    p=self.params, temp_c=self.temp_c,
+                    src_region=reg_f, dst_region=reg_l,
+                    speed_mts=self.module.speed_mts,
+                    mfr=self.module.manufacturer.value,
+                    density_gb=self.module.density_gb,
+                    die_rev=self.module.die_rev)
+                # static per-cell variation around the mean success rate;
+                # E[phi(a + s Z)] = phi(a / sqrt(1+s^2)) keeps the cell-mean
+                # exactly equal to the closed-form not_success.
+                spread = 0.75
+                xi1, _xi2 = self._static_latents(stripe)
+                a = _norm_ppf(np.clip(p_ok, 1e-9, 1 - 1e-9)) \
+                    * math.sqrt(1.0 + spread ** 2)
+                z = A.phi(a + spread * _norm_ppf(xi1))
+                ok = rng.random(self.shared_w) < z
+            else:
+                ok = np.ones(self.shared_w, dtype=bool)
+            dst_bit = np.where(ok, ~src_bit, src_bit).astype(np.float32)
+            for r in rows_l:
+                arr_l[r, l_cols] = dst_bit
+            for r in rows_f:
+                arr_f[r, f_cols] = src_bit.astype(np.float32)
+        else:
+            # ---- Boolean-op protocol: comparator across the stripe ----
+            n_f, n_l = act.n_rf, act.n_rl
+            u_f = A.u_n(n_f, self.params)
+            u_l = A.u_n(n_l, self.params)
+            v_f = u_f * np.sum(arr_f[rows_f][:, f_cols] - 0.5, axis=0)
+            v_l = u_l * np.sum(arr_l[rows_l][:, l_cols] - 0.5, axis=0)
+            # margin convention: compute side (R_L, §6) minus reference (R_F)
+            margin = v_l - v_f
+            # noise context: the reference level sets the common mode
+            # (V_REF > VDD/2 -> AND-family, < VDD/2 -> OR-family)
+            op_ctx = "and" if float(np.mean(v_f)) >= 0.0 else "or"
+            out = self._resolve(margin, stripe, op_ctx, n_l,
+                                regions=(reg_l, reg_f),
+                                random_pattern=random_pattern, rng=rng)
+            outf = out.astype(np.float32)
+            for r in rows_l:
+                arr_l[r, l_cols] = outf          # compute side: result
+            for r in rows_f:
+                arr_f[r, f_cols] = 1.0 - outf    # reference side: complement
+        # non-shared columns: same-subarray restore (MAJ against VDD/2)
+        other_f = np.setdiff1d(np.arange(geom.row_bits), f_cols)
+        other_l = np.setdiff1d(np.arange(geom.row_bits), l_cols)
+        self._maj_restore(f_sub, act.rows_f, other_f, rng)
+        self._maj_restore(l_sub, act.rows_l, other_l, rng)
+        return act
+
+    def apa_then_write(self, rf_global: int, rl_global: int,
+                       pattern: np.ndarray) -> DEC.Activation:
+        """§4.2 reverse-engineering methodology: APA followed by a WR that
+        overdrives the sense amps (Obs. 1 semantics)."""
+        rps = self.geom.rows_per_subarray
+        f_sub, f_row = divmod(rf_global, rps)
+        l_sub, l_row = divmod(rl_global, rps)
+        act = DEC.activation_pattern(self.module, f_row, l_row, seed=self.seed)
+        self.log.add("APA+WR", 30.0, ENERGY_PJ["act"] * (act.n_rf + act.n_rl))
+        if act.n_rf == 0:
+            return act
+        pattern = np.asarray(pattern, dtype=np.float32)
+        arr_f, arr_l = self._arr(f_sub), self._arr(l_sub)
+        _stripe, f_cols, l_cols = self._split_cols(f_sub, l_sub)
+        for r in act.rows_f:
+            arr_f[r] = pattern          # exact pattern (Obs. 1)
+        for r in act.rows_l:
+            arr_l[r, l_cols] = 1.0 - pattern[l_cols]  # negated on shared half
+        return act
+
+    # ---------------- high-level op helpers (ISA entry points) ----------------
+    def op_not(self, src_global: int, dst_global: int, *,
+               n_dst: int | None = None) -> DEC.Activation:
+        """NOT: source row fully restored, then APA into dst's subarray."""
+        return self.apa(src_global, dst_global, first_act_restored=True)
+
+    def op_boolean(self, op: str, ref_global: int, com_global: int, *,
+                   random_pattern: bool = True) -> DEC.Activation:
+        """Many-input AND/OR (+ NAND/NOR on the reference side).
+
+        The caller must have initialized the reference subarray rows
+        (N-1 constants + Frac) and the compute rows (operands); see
+        repro.core.isa for the full protocol.
+        """
+        base, _is_ref = A._base_op(op)
+        del base
+        return self.apa(ref_global, com_global, first_act_restored=False,
+                        random_pattern=random_pattern)
+
+    # ---------------- convenience ----------------
+    def global_addr(self, sub: int, row: int) -> int:
+        return sub * self.geom.rows_per_subarray + row
+
+    def snapshot_rows(self, sub: int, rows) -> np.ndarray:
+        arr = self._arr(sub)
+        return (arr[np.asarray(rows)] > 0.5).astype(np.uint8)

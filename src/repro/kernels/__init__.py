@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (+ pure-jnp oracles) for the FCDRAM framework.
+
+bitwise       — N-ary AND/OR/NAND/NOR/XOR/NOT/MAJ3 on packed uint32 planes
+bitserial     — K-bit ripple-carry adder + bit-sliced popcount counters
+popcount_gemm — 1-bit (packed) GEMM: AND/XNOR + popcount (binary linears)
+senseamp      — fused charge-share + sense-amp Monte-Carlo resolver
+ops           — jit'd public wrappers (interpret=True on CPU, Mosaic on TPU)
+ref           — pure-jnp oracles defining the semantics
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: K-bit bit-serial ripple-carry adder on packed planes.
+
+The TPU twin of the in-DRAM adder synthesized by
+``repro.core.compiler.adder_exprs`` (12 native ops per bit-plane in DRAM);
+on the VPU the full-adder is 5 logical instructions per plane, carried in
+registers across the K-plane loop — one kernel invocation per tile instead
+of 12K row activations.
+
+Layout: a, b: (K, R, C) uint32 (LSB-first planes); out: (K+1, R, C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 8
+TILE_C = 512
+
+
+def _adder_kernel(a_ref, b_ref, o_ref, *, k: int):
+    carry = jnp.zeros((TILE_R, TILE_C), jnp.uint32)
+    for i in range(k):
+        ai = a_ref[i]
+        bi = b_ref[i]
+        axb = ai ^ bi
+        o_ref[i, :, :] = axb ^ carry
+        carry = (ai & bi) | (carry & axb)
+    o_ref[k, :, :] = carry
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def add_planes(a: jax.Array, b: jax.Array, *,
+               interpret: bool = False) -> jax.Array:
+    """(K, R, C) + (K, R, C) packed uint32 -> (K+1, R, C)."""
+    k, r, c = a.shape
+    assert b.shape == a.shape
+    if r % TILE_R or c % TILE_C:
+        pr = (-r) % TILE_R
+        pc = (-c) % TILE_C
+        pad = lambda x: jnp.pad(x, ((0, 0), (0, pr), (0, pc)))
+        return add_planes(pad(a), pad(b), interpret=interpret)[:, :r, :c]
+    grid = (r // TILE_R, c // TILE_C)
+    spec_in = pl.BlockSpec((k, TILE_R, TILE_C), lambda i, j: (0, i, j))
+    return pl.pallas_call(
+        functools.partial(_adder_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((k + 1, r, c), jnp.uint32),
+        grid=grid,
+        in_specs=[spec_in, spec_in],
+        out_specs=pl.BlockSpec((k + 1, TILE_R, TILE_C),
+                               lambda i, j: (0, i, j)),
+        interpret=interpret,
+    )(a, b)
+
+
+def _popcount_kernel(x_ref, o_ref, *, n: int, k: int):
+    """Bit-sliced counter: per-bit popcount across n operand planes."""
+    slices = [jnp.zeros((TILE_R, TILE_C), jnp.uint32) for _ in range(k)]
+    for i in range(n):
+        carry = x_ref[i]
+        for j in range(k):
+            new = slices[j] ^ carry
+            carry = slices[j] & carry
+            slices[j] = new
+    for j in range(k):
+        o_ref[j, :, :] = slices[j]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitcount_planes(planes: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """(N, R, C) uint32 -> (ceil(log2(N+1)), R, C) bit-sliced counters."""
+    n, r, c = planes.shape
+    k = max(1, n.bit_length())
+    if r % TILE_R or c % TILE_C:
+        pr = (-r) % TILE_R
+        pc = (-c) % TILE_C
+        padded = jnp.pad(planes, ((0, 0), (0, pr), (0, pc)))
+        return bitcount_planes(padded, interpret=interpret)[:, :r, :c]
+    grid = (r // TILE_R, c // TILE_C)
+    return pl.pallas_call(
+        functools.partial(_popcount_kernel, n=n, k=k),
+        out_shape=jax.ShapeDtypeStruct((k, r, c), jnp.uint32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, TILE_R, TILE_C), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((k, TILE_R, TILE_C), lambda i, j: (0, i, j)),
+        interpret=interpret,
+    )(planes)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: N-ary bitwise ops on packed uint32 bit-planes.
+
+The TPU execution twin of the paper's bulk in-DRAM Boolean ops: where FCDRAM
+computes a 16-input AND across 16 DRAM rows in one multi-row activation, the
+TPU computes it across 16 packed bit-plane tiles resident in VMEM in one
+kernel pass.  Each grid step processes an (8, 512) uint32 tile per operand
+(VPU-aligned: 8 sublanes x 128 lanes x 4 int32 words), so a single step
+covers 131,072 logical bits per operand — the same order as one DRAM row
+(footnote-6 width 4,096 bits) times 32.
+
+Layout: operands are stacked on the leading axis: planes (N, R, C) uint32.
+The whole operand stack for one (R-tile, C-tile) lives in VMEM at once
+(N <= 16: 16 * 8 * 512 * 4B = 256 KiB... too large; we tile rows to 8 and
+let N vary; VMEM budget = N * 16 KiB + out 16 KiB, fine for N <= 64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-friendly tile: 8 sublanes x 512 lanes of uint32.
+TILE_R = 8
+TILE_C = 512
+
+_REDUCERS = {
+    "and": (jnp.bitwise_and, False),
+    "nand": (jnp.bitwise_and, True),
+    "or": (jnp.bitwise_or, False),
+    "nor": (jnp.bitwise_or, True),
+    "xor": (jnp.bitwise_xor, False),
+}
+
+
+def _nary_kernel(x_ref, o_ref, *, op: str, n: int):
+    fn, invert = _REDUCERS[op]
+    acc = x_ref[0]
+    for i in range(1, n):
+        acc = fn(acc, x_ref[i])
+    if invert:
+        acc = ~acc
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def nary_bitwise(planes: jax.Array, *, op: str,
+                 interpret: bool = False) -> jax.Array:
+    """planes: (N, R, C) uint32 -> (R, C) uint32; op in {and,or,nand,nor,xor}."""
+    n, r, c = planes.shape
+    if r % TILE_R or c % TILE_C:
+        pr = (-r) % TILE_R
+        pc = (-c) % TILE_C
+        planes = jnp.pad(planes, ((0, 0), (0, pr), (0, pc)))
+        out = nary_bitwise(planes, op=op, interpret=interpret)
+        return out[:r, :c]
+    grid = (r // TILE_R, c // TILE_C)
+    return pl.pallas_call(
+        functools.partial(_nary_kernel, op=op, n=n),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.uint32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, TILE_R, TILE_C),
+                               lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(planes)
+
+
+def _not_kernel(x_ref, o_ref):
+    o_ref[...] = ~x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitwise_not(plane: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """(R, C) uint32 -> bitwise complement (the paper's NOT, §5)."""
+    r, c = plane.shape
+    if r % TILE_R or c % TILE_C:
+        pr = (-r) % TILE_R
+        pc = (-c) % TILE_C
+        out = bitwise_not(jnp.pad(plane, ((0, pr), (0, pc))),
+                          interpret=interpret)
+        return out[:r, :c]
+    return pl.pallas_call(
+        _not_kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.uint32),
+        grid=(r // TILE_R, c // TILE_C),
+        in_specs=[pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(plane)
+
+
+def _maj3_kernel(a_ref, b_ref, c_ref, o_ref):
+    a, b, c = a_ref[...], b_ref[...], c_ref[...]
+    o_ref[...] = (a & b) | (c & (a | b))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def maj3(a: jax.Array, b: jax.Array, c: jax.Array, *,
+         interpret: bool = False) -> jax.Array:
+    """Bitwise 3-input majority (the primitive of prior PuD works)."""
+    r, cc = a.shape
+    if r % TILE_R or cc % TILE_C:
+        pr = (-r) % TILE_R
+        pc = (-cc) % TILE_C
+        pad = lambda x: jnp.pad(x, ((0, pr), (0, pc)))
+        return maj3(pad(a), pad(b), pad(c), interpret=interpret)[:r, :cc]
+    spec = pl.BlockSpec((TILE_R, TILE_C), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _maj3_kernel,
+        out_shape=jax.ShapeDtypeStruct((r, cc), jnp.uint32),
+        grid=(r // TILE_R, cc // TILE_C),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=interpret,
+    )(a, b, c)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: 1-bit (packed) GEMM via AND/XNOR + popcount.
+
+The end-to-end use of the paper's substrate: binary-quantized linear layers
+(repro.models.quant) compute ``Y = X_b . W_b^T`` where both operands are
+{0,1}- or {-1,+1}-valued and bit-packed.  In DRAM the same product is a
+sequence of many-input ANDs + a bit-serial popcount tree
+(repro.core.compiler.popcount_exprs); on the TPU it is this VPU kernel.
+
+TPU adaptation note: the MXU has no 1-bit mode, so the inner product is
+computed on the VPU as popcount(AND/XOR) accumulated in int32 — with a
+(M_TILE, N_TILE) output tile per grid step and the K (packed-words) axis
+innermost and fully resident in VMEM.
+
+x: (M, KB) uint32, w: (N, KB) uint32 -> (M, N) int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+M_TILE = 128
+N_TILE = 128
+K_TILE = 64          # packed words per step: 64*32 = 2048 logical bits
+
+
+def _pc_gemm_kernel(x_ref, w_ref, o_ref, *, kb: int, kind: str,
+                    k_logical: int):
+    """Grid: (M/M_TILE, N/N_TILE, KB/K_TILE); K innermost for accumulation."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.zeros((M_TILE, N_TILE), jnp.int32)
+    for b in range(K_TILE):
+        xv = x_ref[:, b]                      # (M_TILE,)
+        wv = w_ref[:, b]                      # (N_TILE,)
+        if kind == "and":
+            m = xv[:, None] & wv[None, :]     # (M_TILE, N_TILE)
+        else:
+            m = xv[:, None] ^ wv[None, :]
+        acc = acc + jax.lax.population_count(m).astype(jnp.int32)
+    o_ref[...] = o_ref[...] + acc
+
+    if kind == "xnor":
+        @pl.when(kk == kb // K_TILE - 1)
+        def _finish():
+            o_ref[...] = k_logical - 2 * o_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def popcount_gemm(x: jax.Array, w: jax.Array, *, kind: str = "and",
+                  interpret: bool = False) -> jax.Array:
+    """x: (M, KB) uint32, w: (N, KB) uint32 -> (M, N) int32."""
+    m, kb = x.shape
+    n, kb2 = w.shape
+    assert kb == kb2
+    pm, pn, pk = (-m) % M_TILE, (-n) % N_TILE, (-kb) % K_TILE
+    if pm or pn or pk:
+        xp = jnp.pad(x, ((0, pm), (0, pk)))
+        wp = jnp.pad(w, ((0, pn), (0, pk)))
+        out = popcount_gemm(xp, wp, kind=kind, interpret=interpret)
+        if kind == "xnor":
+            # padding contributed (pk*32) zero-bits: xnor counts them as
+            # matches; correct by the K delta
+            out = out - 32 * pk
+        return out[:m, :n]
+    grid = (m // M_TILE, n // N_TILE, kb // K_TILE)
+    return pl.pallas_call(
+        functools.partial(_pc_gemm_kernel, kb=kb, kind=kind,
+                          k_logical=kb * 32),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M_TILE, K_TILE), lambda i, j, k: (i, k)),
+            pl.BlockSpec((N_TILE, K_TILE), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((M_TILE, N_TILE), lambda i, j, k: (i, j)),
+        interpret=interpret,
+    )(x, w)

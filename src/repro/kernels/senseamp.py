@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused charge-share + sense-amp Monte-Carlo resolver.
+
+The hot loop of the FCDRAM analog simulator, vectorized: given the cell
+voltages of the activated compute / reference rows, produce the resolved
+logic values of every shared column in one pass — charge sharing (mean over
+activated cells), static per-SA offset, per-trial Gaussian noise, threshold
+shift (Frac drift) and the activation-failure coin flip.
+
+Used by ``repro.pud.engine`` for fast error injection when simulating large
+in-DRAM workloads (millions of columns), where the numpy BankSim would
+dominate runtime.  Matches ``repro.kernels.ref.senseamp_resolve`` and the
+numpy ``BankSim._resolve`` semantics.
+
+Inputs (W = number of shared columns, padded to a lane multiple):
+  com_cells: (N_com, W) f32 — compute-side cell voltages in [0,1]
+  ref_cells: (N_ref, W) f32 — reference-side voltages (constants + Frac)
+  static:    (W,) f32       — per-SA static offsets [V]
+  normals:   (W,) f32       — standard normal draws (trial noise)
+  uniforms:  (2, W) f32     — floor flip + coin draws
+Scalars (compile-time): u_com, u_ref (charge-share swing), shift, pf,
+  trial_sigma.
+Output: (W,) uint8 resolved values.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_W = 1024
+
+
+def _senseamp_kernel(com_ref, rf_ref, st_ref, nz_ref, un_ref, o_ref, *,
+                     n_com: int, n_ref: int, u_com: float, u_ref: float,
+                     shift: float, pf: float, trial_sigma: float):
+    v_com = jnp.zeros((TILE_W,), jnp.float32)
+    for i in range(n_com):
+        v_com = v_com + (com_ref[i] - 0.5)
+    v_com = v_com * u_com
+    v_ref = jnp.zeros((TILE_W,), jnp.float32)
+    for i in range(n_ref):
+        v_ref = v_ref + (rf_ref[i] - 0.5)
+    v_ref = v_ref * u_ref
+    margin = (v_com - v_ref - shift + st_ref[...]
+              + trial_sigma * nz_ref[...])
+    out = margin > 0.0
+    flip = un_ref[0] < pf
+    coin = un_ref[1] < 0.5
+    o_ref[...] = jnp.where(flip, coin, out).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("u_com", "u_ref", "shift", "pf",
+                                    "trial_sigma", "interpret"))
+def senseamp_resolve(com_cells: jax.Array, ref_cells: jax.Array,
+                     static: jax.Array, normals: jax.Array,
+                     uniforms: jax.Array, *, u_com: float, u_ref: float,
+                     shift: float, pf: float, trial_sigma: float,
+                     interpret: bool = False) -> jax.Array:
+    n_com, w = com_cells.shape
+    n_ref = ref_cells.shape[0]
+    pw = (-w) % TILE_W
+    if pw:
+        pad1 = lambda x: jnp.pad(x, ((0, 0), (0, pw)))
+        out = senseamp_resolve(pad1(com_cells), pad1(ref_cells),
+                               jnp.pad(static, (0, pw)),
+                               jnp.pad(normals, (0, pw)),
+                               pad1(uniforms), u_com=u_com, u_ref=u_ref,
+                               shift=shift, pf=pf, trial_sigma=trial_sigma,
+                               interpret=interpret)
+        return out[:w]
+    grid = (w // TILE_W,)
+    return pl.pallas_call(
+        functools.partial(_senseamp_kernel, n_com=n_com, n_ref=n_ref,
+                          u_com=u_com, u_ref=u_ref, shift=shift, pf=pf,
+                          trial_sigma=trial_sigma),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.uint8),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_com, TILE_W), lambda i: (0, i)),
+            pl.BlockSpec((n_ref, TILE_W), lambda i: (0, i)),
+            pl.BlockSpec((TILE_W,), lambda i: (i,)),
+            pl.BlockSpec((TILE_W,), lambda i: (i,)),
+            pl.BlockSpec((2, TILE_W), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((TILE_W,), lambda i: (i,)),
+        interpret=interpret,
+    )(com_cells, ref_cells, static, normals, uniforms)

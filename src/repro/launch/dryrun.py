@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 host placeholder devices, lowers the jitted
+train / prefill / decode step with ShapeDtypeStruct inputs (no allocation),
+compiles it through the XLA SPMD partitioner, and records
+``memory_analysis`` / ``cost_analysis`` / the collective schedule for the
+roofline (§Roofline in EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch minitron-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, SKIPS, get_config
+from ..models import transformer as T
+from ..models.config import ModelConfig, ShapeConfig, TrainConfig
+from ..train import step as TS
+from . import jaxpr_cost as JC
+from . import roofline as RL
+from .mesh import dp_size, make_production_mesh
+from .sharding import (batch_specs, cache_specs, state_specs, param_specs,
+                       to_shardings)
+
+#: per-arch gradient-accumulation plan for train_4k (activation-memory knob)
+MICROBATCHES = {
+    "llama3-405b": 8, "llama-3.2-vision-90b": 8, "grok-1-314b": 8,
+    "minitron-8b": 2, "granite-3-8b": 2, "qwen3-4b": 2,
+    "qwen2-moe-a2.7b": 2, "musicgen-medium": 1, "hymba-1.5b": 1,
+    "mamba2-780m": 1,
+}
+
+
+def train_config_for(arch: str) -> TrainConfig:
+    return TrainConfig(n_microbatches=MICROBATCHES.get(arch, 1))
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+            "loss_mask": sds((b, s), jnp.float32),
+        }
+        if cfg.cross_attn_every:
+            batch["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        if cfg.audio_frontend_stub:
+            batch["input_embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {
+            "tokens": sds((b, s), jnp.int32),
+            "positions": sds((b, s), jnp.int32),
+        }
+        if cfg.cross_attn_every:
+            batch["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        if cfg.audio_frontend_stub:
+            batch["input_embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against an S-long cache
+    batch = {
+        "tokens": sds((b, 1), jnp.int32),
+        "positions": sds((b, 1), jnp.int32),
+    }
+    if cfg.cross_attn_every:
+        batch["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    return batch
+
+
+def _prefill_step_fn(cfg: ModelConfig):
+    """Prefill: full forward + last-token logits (serving semantics —
+    emitting (B, S, V) logits at 32k would be absurd; see DESIGN.md)."""
+    def prefill_step(params, batch):
+        logits = T.forward(params, cfg, batch)
+        return logits[:, -1, :]
+    return prefill_step
+
+
+def _decode_step_fn(cfg: ModelConfig):
+    def serve_step(params, caches, batch):
+        logits, new_caches = T.decode_step(
+            params, cfg, batch["tokens"], caches, batch["positions"],
+            image_embeds=batch.get("image_embeds"))
+        return logits[:, -1, :], new_caches
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one cell
+# ---------------------------------------------------------------------------
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               compression: str = "none"):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        tc = train_config_for(arch)
+        if compression != "none":
+            tc = TrainConfig(n_microbatches=tc.n_microbatches,
+                             grad_compression=compression)
+        state_shape = jax.eval_shape(lambda k: TS.init_state(k, cfg, tc), key)
+        batch_shape = input_specs(cfg, shape)
+        st_spec = state_specs(cfg, state_shape, mesh)
+        b_spec = batch_specs(batch_shape, mesh)
+        step_fn = TS.build_train_step(cfg, tc)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(to_shardings(st_spec, mesh),
+                              to_shardings(b_spec, mesh)),
+            )
+            lowered = jitted.lower(state_shape, batch_shape)
+        return lowered, cfg, shape, (step_fn, (state_shape, batch_shape))
+
+    params_shape = jax.eval_shape(lambda k: T.init_params(k, cfg), key)
+    p_spec = param_specs(cfg, params_shape, mesh)
+    batch_shape = input_specs(cfg, shape)
+    b_spec = batch_specs(batch_shape, mesh)
+    if shape.kind == "prefill":
+        fn = _prefill_step_fn(cfg)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=(to_shardings(p_spec, mesh),
+                                               to_shardings(b_spec, mesh)))
+            lowered = jitted.lower(params_shape, batch_shape)
+        return lowered, cfg, shape, (fn, (params_shape, batch_shape))
+    # decode
+    s_cache = shape.seq_len
+    cache_shape = jax.eval_shape(
+        lambda: T.init_caches(cfg, shape.global_batch, s_cache,
+                              dtype=jnp.bfloat16))
+    c_spec = cache_specs(cfg, cache_shape, mesh)
+    fn = _decode_step_fn(cfg)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=(to_shardings(p_spec, mesh),
+                                           to_shardings(c_spec, mesh),
+                                           to_shardings(b_spec, mesh)))
+        lowered = jitted.lower(params_shape, cache_shape, batch_shape)
+    return lowered, cfg, shape, (fn, (params_shape, cache_shape, batch_shape))
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str | None = None, compression: str = "none") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lowered, cfg, shape, (fn, fn_args) = lower_cell(
+        arch, shape_name, mesh, compression=compression)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    jc = JC.jaxpr_cost(fn, *fn_args)
+    n_dev = mesh.size
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "devices": n_dev, "kind": shape.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": RL.memory_dict(mem),
+        "cost": {k: v for k, v in (cost or {}).items()
+                 if isinstance(v, (int, float))},
+        "jaxpr_cost": jc,
+        "collectives": RL.collective_bytes(compiled),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    record["roofline"] = RL.roofline_terms(record, cfg, shape, n_dev)
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+          f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+          f"bytes/dev {record['memory'].get('argument_size_bytes', 0)}")
+    print(json.dumps(record["roofline"], indent=1))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(fn, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]]
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES
+                 if (a, s) not in SKIPS]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        if (arch, shape) in SKIPS:
+            print(f"[dryrun] SKIP {arch} x {shape}: {SKIPS[(arch, shape)]}")
+            continue
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                         compression=args.compression)
+            except Exception as e:  # noqa: BLE001 — report-and-continue CLI
+                traceback.print_exc()
+                failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\n[dryrun] all cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

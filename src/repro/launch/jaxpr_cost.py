@@ -1,0 +1,171 @@
+"""Exact FLOP / byte accounting by walking the traced jaxpr.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies *once*, which
+undercounts scanned layer stacks by ~n_layers.  This walker traverses the
+jaxpr of the jitted step function and multiplies each ``scan`` body by its
+trip count (recursively), giving exact totals — including the recompute
+that ``jax.checkpoint`` (remat) inserts, which is precisely the
+"useful-flops ratio" diagnostic the roofline wants.
+
+FLOP conventions (standard): dot_general = 2*M*N*K (batch-included);
+elementwise/unary = output size; reduce = input size; exp/log/tanh/erf
+counted as 1 flop.  Bytes = operand + result sizes per primitive
+(an upper bound: ignores XLA fusion, reported as ``bytes_upper``).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import numpy as np
+from jax import core
+
+
+def _size(aval) -> int:
+    return int(np.prod(aval.shape)) if aval.shape else 1
+
+
+def _bytes(aval) -> int:
+    return _size(aval) * aval.dtype.itemsize
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    m = _size(eqn.outvars[0].aval)
+    k = 1
+    for d in lc:
+        k *= a.shape[d]
+    return 2.0 * m * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops = 2 * out_size * (kernel spatial * in_channels)
+    k = int(np.prod(rhs.shape[:-1]))   # approx: all but out-channel dim
+    return 2.0 * _size(out) * k
+
+
+#: primitives whose operands/results must move through HBM even under
+#: perfect elementwise fusion (MXU / data-movement ops are fusion barriers)
+_MAJOR_PRIMS = ("dot_general", "conv_general_dilated", "gather", "scatter",
+                "scatter-add", "reduce_sum", "reduce_max", "reduce_min",
+                "sort", "top_k", "cumsum")
+
+
+class CostWalker:
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0          # naive: every primitive's operands+results
+        self.bytes_major = 0.0    # fusion-aware: major ops only
+        self.by_prim: dict[str, float] = {}
+        self.bytes_by_shape: dict[str, float] = {}   # major-op diagnostics
+
+    def _add(self, prim: str, fl: float, by: float, mult: float,
+             shape_key: str = ""):
+        self.flops += fl * mult
+        self.bytes += by * mult
+        if prim in _MAJOR_PRIMS:
+            self.bytes_major += by * mult
+            key = f"{prim}:{shape_key}"
+            self.bytes_by_shape[key] = self.bytes_by_shape.get(key, 0.0) \
+                + by * mult
+        self.by_prim[prim] = self.by_prim.get(prim, 0.0) + fl * mult
+
+    def _walk_fused(self, eqn, mult: float) -> None:
+        """A ``fused_*`` jit region (lowered to a single Pallas kernel on
+        TPU, kernels/flash_attention.py): count its FLOPs fully but its HBM
+        traffic as the region *boundary* bytes only — intermediates (score
+        tiles, softmax stats) stay in VMEM."""
+        sub = eqn.params.get("jaxpr")
+        if hasattr(sub, "jaxpr"):
+            sub = sub.jaxpr
+        inner = CostWalker()
+        inner.walk(sub, mult)
+        self.flops += inner.flops
+        self.bytes += inner.bytes
+        for k, v in inner.by_prim.items():
+            self.by_prim[k] = self.by_prim.get(k, 0.0) + v
+        boundary = sum(_bytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+        boundary += sum(_bytes(v.aval) for v in eqn.outvars)
+        self.bytes_major += boundary * mult
+        key = f"fused:{eqn.params.get('name', '?')}"
+        self.bytes_by_shape[key] = self.bytes_by_shape.get(key, 0.0) \
+            + boundary * mult
+
+    def walk(self, jaxpr, mult: float = 1.0) -> None:
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            sub = None
+            submult = mult
+            if name in ("pjit", "jit") and str(
+                    eqn.params.get("name", "")).startswith("fused_"):
+                self._walk_fused(eqn, mult)
+                continue
+            if name == "scan":
+                sub = eqn.params["jaxpr"].jaxpr
+                submult = mult * eqn.params["length"]
+            elif name == "while":
+                sub = eqn.params["body_jaxpr"].jaxpr
+                # trip count unknown in general; our code only uses scan
+                submult = mult
+            elif name in ("pjit", "jit", "closed_call", "core_call",
+                          "remat_call", "xla_call", "custom_jvp_call",
+                          "custom_vjp_call", "custom_vjp_call_jaxpr",
+                          "remat", "remat2", "checkpoint"):
+                p = eqn.params
+                sub = (p.get("jaxpr") or p.get("call_jaxpr"))
+                if hasattr(sub, "jaxpr"):
+                    sub = sub.jaxpr
+            elif name == "cond":
+                branches = eqn.params["branches"]
+                # worst case branch
+                best = None
+                for br in branches:
+                    w = CostWalker()
+                    w.walk(br.jaxpr, 1.0)
+                    if best is None or w.flops > best.flops:
+                        best = w
+                self.flops += best.flops * mult
+                self.bytes += best.bytes * mult
+                continue
+            if sub is not None:
+                self.walk(sub, submult)
+                continue
+
+            out_b = sum(_bytes(v.aval) for v in eqn.outvars)
+            in_b = sum(_bytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+            skey = "x".join(str(d) for d in eqn.outvars[0].aval.shape) \
+                if eqn.outvars else ""
+            if name == "dot_general":
+                self._add(name, _dot_flops(eqn), in_b + out_b, mult, skey)
+            elif name == "conv_general_dilated":
+                self._add(name, _conv_flops(eqn), in_b + out_b, mult, skey)
+            else:
+                osz = sum(_size(v.aval) for v in eqn.outvars)
+                self._add(name, float(osz), in_b + out_b, mult, skey)
+
+
+def jaxpr_cost(fn, *args, **kwargs) -> dict:
+    """Trace ``fn(*args)`` abstractly and return exact flop/byte totals."""
+    closed = jax.make_jaxpr(partial(fn, **kwargs))(*args)
+    w = CostWalker()
+    w.walk(closed.jaxpr)
+    # program inputs + outputs cross HBM once regardless of fusion
+    io_bytes = sum(_bytes(v.aval) for v in closed.jaxpr.invars)
+    io_bytes += sum(_bytes(v.aval) for v in closed.jaxpr.outvars
+                    if hasattr(v, "aval"))
+    top = sorted(w.by_prim.items(), key=lambda kv: -kv[1])[:8]
+    top_b = sorted(w.bytes_by_shape.items(), key=lambda kv: -kv[1])[:10]
+    return {
+        "flops": w.flops,
+        "bytes_upper": w.bytes,
+        "bytes_major": w.bytes_major + io_bytes,
+        "top_flop_prims": {k: v for k, v in top},
+        "top_byte_ops": {k: v for k, v in top_b},
+    }

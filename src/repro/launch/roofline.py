@@ -1,0 +1,251 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e targets):
+
+  compute    = HLO_FLOPs / (chips * 197e12)          [bf16 MXU peak]
+  memory     = HLO_bytes / (chips * 819e9)           [HBM bandwidth]
+  collective = collective_bytes / (chips * 50e9)     [ICI per link]
+
+``cost_analysis`` yields per-device FLOPs/bytes of the SPMD program (so the
+global quantities are per-device * chips, and the per-chip time is the
+per-device number over per-chip peak — the formulas below use the
+per-device values directly).  Collective bytes are not in cost_analysis:
+we parse the post-partitioning HLO and sum the *output* operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.
+
+MODEL_FLOPS sanity: 6*N*D for dense training (N params, D tokens),
+2*N_active*D for decode — the ratio MODEL_FLOPS / HLO_FLOPs exposes
+remat/redundancy overhead.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of all shapes in an HLO result type (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)[^/\n]*condition=%?([\w.\-]+)[^/\n]*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls|body|condition)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+
+
+def _parse_computations(txt: str) -> dict[str, list[str]]:
+    """HLO text -> {computation name: [lines]} (brace-delimited blocks)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in txt.splitlines():
+        s = line.strip()
+        m = _COMP_RE.match(s)
+        if m and s.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s == "}" or s.startswith("} "):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Trip count from a scan's condition computation: the loop bound is
+    the s32[] constant compared against the induction variable."""
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in [_CONST_RE.search(line)] if m]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(txt: str) -> dict[str, float]:
+    """Execution-count multiplier per computation, propagating while-loop
+    trip counts through the call graph from ENTRY."""
+    comps = _parse_computations(txt)
+    entry = None
+    for line in txt.splitlines():
+        m = re.match(r"ENTRY %?([\w.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: the computation named like the module or the last one
+        entry = next(iter(comps)) if comps else None
+    # edges: parent -> [(child, mult)]; unknown callees are ignored
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                n = _trip_count(comps.get(cond, []))
+                if body in comps:
+                    edges[cname].append((body, float(n)))
+                if cond in comps:
+                    edges[cname].append((cond, float(n + 1)))
+                continue
+            for callee in _CALL_RE.findall(line):
+                if callee in comps and callee != cname:
+                    edges[cname].append((callee, 1.0))
+    if entry not in comps:
+        return {c: 1.0 for c in comps}
+    # HLO computations form a DAG (no recursion): topo-accumulate executions.
+    indeg: dict[str, int] = {c: 0 for c in comps}
+    for cname in comps:
+        for child, _m in edges[cname]:
+            indeg[child] += 1
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    ready = [c for c in comps if indeg[c] == 0]
+    while ready:
+        c = ready.pop()
+        for child, m in edges[c]:
+            mult[child] += mult[c] * m
+            indeg[child] -= 1
+            if indeg[child] == 0:
+                ready.append(child)
+    # computations never reached from ENTRY (dead): treat as once
+    for c in comps:
+        if indeg[c] > 0 and mult[c] == 0.0:
+            mult[c] = 1.0
+    return mult
+
+
+def collective_bytes(compiled, *, bf16_widening_correction: bool = True,
+                     ) -> dict:
+    """Collective bytes from the post-SPMD HLO, with while-body trip-count
+    multipliers (XLA prints loop bodies once; a scanned layer stack executes
+    them n_layers times).
+
+    ``bf16_widening_correction``: XLA:CPU canonicalizes bf16 to f32 (bf16
+    is storage-only on the CPU backend), so every activation collective in
+    the dry-run HLO appears f32-widened; on the TPU target the same
+    collectives move bf16.  The correction halves f32 collective bytes.
+    It over-corrects genuinely-f32 collectives (grad accumulators), so the
+    raw total is recorded alongside — the truth lies between, much closer
+    to the corrected value (activations dominate collective volume).
+    """
+    try:
+        txt = compiled.as_text()
+    except Exception:   # pragma: no cover - backends without as_text
+        return {}
+    comps = _parse_computations(txt)
+    mults = computation_multipliers(txt)
+    out = {k: 0.0 for k in _COLLECTIVES}
+    raw = {k: 0.0 for k in _COLLECTIVES}
+    count = {k: 0.0 for k in _COLLECTIVES}
+    op_re = re.compile(r"(?:ROOT )?[%\w.\-]+\s*=\s*((?:\([^)]*\))|"
+                       r"(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+([a-z\-]+)")
+    for cname, lines in comps.items():
+        m = mults.get(cname, 1.0)
+        for line in lines:
+            lm = op_re.match(line)
+            if not lm:
+                continue
+            op = lm.group(2)
+            for c in _COLLECTIVES:
+                if op == c or op == c + "-start":
+                    b = _shape_bytes(lm.group(1))
+                    raw[c] += b * m
+                    if bf16_widening_correction and \
+                            lm.group(1).lstrip("(").startswith("f32"):
+                        b *= 0.5
+                    out[c] += b * m
+                    count[c] += m
+                    break
+    return {"bytes": {k: int(v) for k, v in out.items()},
+            "counts": {k: int(v) for k, v in count.items()},
+            "total_bytes": int(sum(out.values())),
+            "total_bytes_raw_f32_widened": int(sum(raw.values()))}
+
+
+def memory_dict(mem) -> dict:
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes",
+                 "peak_memory_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr.replace("_in_bytes", "_bytes")] = int(v)
+    if isinstance(mem, dict):
+        out.update({k: int(v) for k, v in mem.items()
+                    if isinstance(v, (int, float))})
+    return out
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6*N*D (train) / 2*N*D (inference) with MoE active params."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens
+
+
+def roofline_terms(record: dict, cfg, shape, n_dev: int) -> dict:
+    """Three-term roofline.
+
+    * compute / memory: exact global FLOPs / bytes from the jaxpr walker
+      (scan-length-correct, includes remat recompute),
+    * collective: per-device collective bytes from the post-SPMD HLO with
+      while-body trip-count multipliers.  Per-chip seconds; the spec's
+      global/(chips*bw) formulation is identical since global = per-chip
+      * chips for all three.
+    """
+    jc = record.get("jaxpr_cost", {})
+    flops_global = float(jc.get("flops", 0.0))
+    bytes_global = float(jc.get("bytes_major", jc.get("bytes_upper", 0.0)))
+    coll_dev = float(record.get("collectives", {}).get("total_bytes", 0.0))
+    t_compute = flops_global / n_dev / PEAK_FLOPS
+    t_memory = bytes_global / n_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, shape.kind)
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": flops_global,
+        "useful_flops_ratio": (mf / flops_global) if flops_global else 0.0,
+        "bound_s": max(terms.values()),
+        "roofline_fraction": (
+            (mf / n_dev / PEAK_FLOPS) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+        "xla_cost_flops_per_dev_loop_bodies_once": record.get(
+            "cost", {}).get("flops", 0.0),
+    }

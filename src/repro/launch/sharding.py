@@ -1,0 +1,177 @@
+"""Sharding rules: parameter / input / cache PartitionSpecs per (arch, mesh).
+
+Strategy (see DESIGN.md §5): explicit, divisibility-safe specs on the
+*boundaries* (parameters, batch, caches); GSPMD propagates internal
+shardings and inserts collectives.  Explicit specs are only emitted when
+the axis size divides the mesh axis — so every (arch x shape x mesh) cell
+compiles; sharding quality is then iterated in the §Perf hillclimb.
+
+Parameter rule per leaf (stacked block params skip the layer axis):
+  1. largest axis divisible by |model|  -> "model"     (tensor parallel)
+  2. if cfg.fsdp: largest *other* axis divisible by |data| -> "data"
+     (ZeRO-3-style parameter sharding; XLA all-gathers per use)
+  3. 1-D params replicate.
+"""
+from __future__ import annotations
+
+import re
+from functools import partial
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .mesh import dp_axes, model_size
+
+
+#: archs whose parameters+optimizer exceed single-chip HBM without FSDP
+FSDP_THRESHOLD_PARAMS = 30e9
+
+
+def _is_stacked(path: str) -> bool:
+    return "blocks" in path
+
+
+def _leaf_path(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+#: Megatron pairing: column-parallel producers (shard the OUTPUT axis) feed
+#: row-parallel consumers (shard the INPUT axis) so each block needs only
+#: one all-reduce per projection pair in fwd (+1 in bwd).
+_COL_PARALLEL = re.compile(r"/(wq|wk|wv|w_gate|w_up|w_in|router)$")
+_ROW_PARALLEL = re.compile(r"/(wo|w_down|w_out)$")
+
+
+def param_spec(path: str, shape: tuple[int, ...], *, mesh,
+               fsdp: bool) -> P:
+    ndim = len(shape)
+    start = 1 if _is_stacked(path) and ndim >= 2 else 0
+    axes_free = list(range(start, ndim))
+    if not axes_free:
+        return P()
+    msize = model_size(mesh)
+    dnames = dp_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dnames])) if dnames else 1
+    spec: list = [None] * ndim
+    # 1) model axis: Megatron-paired for named projections, else largest
+    #    divisible axis.  Embedding tables shard on the vocab axis only —
+    #    sharding d_model under a token gather + tied unembed trips the
+    #    SPMD partitioner (observed: granite-3-8b, vocab 49155).
+    m_axis = None
+    if path.endswith("table"):
+        if msize > 1 and shape[0] % msize == 0:
+            m_axis = 0
+        spec_out = [None] * ndim
+        if m_axis is not None:
+            spec_out[m_axis] = "model"
+        return P(*spec_out)
+    if msize > 1 and ndim - start >= 2:
+        if _COL_PARALLEL.search(path) and shape[-1] % msize == 0:
+            m_axis = ndim - 1
+        elif _ROW_PARALLEL.search(path) and shape[-2] % msize == 0:
+            m_axis = ndim - 2
+    cand = sorted(axes_free, key=lambda a: -shape[a])
+    if m_axis is None:
+        m_axis = next((a for a in cand if msize > 1
+                       and shape[a] % msize == 0 and shape[a] >= msize),
+                      None)
+    if m_axis is not None:
+        spec[m_axis] = "model"
+    # 2) fsdp axis over pure-dp mesh axes ("data" or ("pod","data"))
+    if fsdp and dnames:
+        cand2 = [a for a in cand if a != m_axis]
+        d_axis = next((a for a in cand2
+                       if shape[a] % dsize == 0 and shape[a] >= dsize), None)
+        if d_axis is not None:
+            spec[d_axis] = dnames if len(dnames) > 1 else dnames[0]
+    return P(*spec)
+
+
+def use_fsdp(cfg: ModelConfig) -> bool:
+    return cfg.param_count() >= FSDP_THRESHOLD_PARAMS
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh):
+    """Pytree of PartitionSpec matching a params (shape) pytree."""
+    fsdp = use_fsdp(cfg)
+    leaves = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    treedef = jax.tree_util.tree_structure(params_shape)
+    specs = [param_spec(_leaf_path(p), tuple(v.shape), mesh=mesh, fsdp=fsdp)
+             for p, v in leaves]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def state_specs(cfg: ModelConfig, state_shape, mesh):
+    """Train-state specs: optimizer slots follow their parameter."""
+    leaves = jax.tree_util.tree_flatten_with_path(state_shape)[0]
+    treedef = jax.tree_util.tree_structure(state_shape)
+    fsdp = use_fsdp(cfg)
+    out = []
+    for p, v in leaves:
+        path = _leaf_path(p)
+        if path == "step" or path.endswith("count"):
+            out.append(P())
+            continue
+        out.append(param_spec(path, tuple(v.shape), mesh=mesh, fsdp=fsdp))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_axis_spec(batch_size: int, mesh):
+    """Spec entry for a global-batch axis: as many dp axes as divide it."""
+    dnames = dp_axes(mesh)
+    use = []
+    rem = batch_size
+    for a in dnames:
+        sz = mesh.shape[a]
+        if rem % sz == 0 and rem >= sz:
+            use.append(a)
+            rem //= sz
+    if not use:
+        return None
+    return tuple(use) if len(use) > 1 else use[0]
+
+
+def batch_specs(batch_shape, mesh):
+    """Input-batch pytree specs: axis 0 = global batch, rest replicated."""
+    def one(v):
+        b = v.shape[0] if v.ndim else 1
+        return P(batch_axis_spec(b, mesh), *([None] * (v.ndim - 1)))
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh):
+    """KV/SSM cache specs (stacked (L, B, ...)):
+
+    * batch axis -> dp axes (if divisible),
+    * KV seq axis -> "model" (flash-decode style: partial attention +
+      XLA-inserted combine) — works for every head count,
+    * SSM head axis -> "model" if divisible.
+    """
+    msize = model_size(mesh)
+    leaves = jax.tree_util.tree_flatten_with_path(cache_shape)[0]
+    treedef = jax.tree_util.tree_structure(cache_shape)
+    out = []
+    for p, v in leaves:
+        path = _leaf_path(p)
+        shape = v.shape
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2:
+            spec[1] = batch_axis_spec(shape[1], mesh)     # (L, B, ...)
+        if re.search(r"/(k|v|pos)$", path) and len(shape) >= 3:
+            if msize > 1 and shape[2] % msize == 0:
+                spec[2] = "model"                          # cache seq axis
+        elif path.endswith("state") and len(shape) >= 3:
+            if msize > 1 and shape[2] % msize == 0:
+                spec[2] = "model"                          # ssm heads
+        out.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

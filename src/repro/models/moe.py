@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k router.
+
+Covers qwen2-moe (4 shared + 60 routed, top-4) and grok-1 (8 routed,
+top-2).  Dispatch is capacity-based (Switch-style) with dropped-token
+handling, implemented with one-hot dispatch/combine einsums — the dispatch
+masks are exactly the bulk-Boolean bit-planes the PuD engine accelerates
+(see repro.pud.masks.route_mask_planes).
+
+Sharding: experts are TP-sharded on their hidden axis (d_expert divisible
+by the model-axis for all assigned configs: 1408/16, 32768/16); the expert
+axis stays unsharded because neither 60 nor 8 divides the 16-way model
+axis — recorded in DESIGN.md §Arch-applicability.  EP over a dedicated
+axis is exercised in the perf hillclimb for the MoE cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dt, dense_init, init_mlp, apply_mlp
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    dt = _dt(cfg, "param")
+    ks = jax.random.split(key, 5)
+    e, d, dff = cfg.n_experts, cfg.d_model, cfg.d_expert
+    def ew(k, i, o):
+        return (jax.random.normal(k, (e, i, o), jnp.float32)
+                / jnp.sqrt(i)).astype(dt)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": ew(ks[1], d, dff),
+        "w_up": ew(ks[2], d, dff),
+        "w_down": ew(ks[3], dff, d),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg,
+                               d_ff=cfg.d_ff * cfg.n_shared_experts
+                               if cfg.d_ff else cfg.d_expert
+                               * cfg.n_shared_experts)
+    return p
+
+
+def apply_moe(p: dict, cfg: ModelConfig, x: jax.Array,
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Capacity-based top-k routing with *sort-based* dispatch (scatter into
+    (E, C, D) expert buffers): O(T*K) index work instead of the classic
+    (T, E, C) one-hot dispatch tensor, which is infeasible at 1M-token
+    global batches (43 TB for the qwen2-moe cell).
+    """
+    b, s, d = x.shape
+    cdt = _dt(cfg, "compute")
+    e, k_top = cfg.n_experts, cfg.moe_top_k
+    n_tok = b * s
+    xt = x.reshape(n_tok, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k_top)       # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    capacity = max(int(cfg.capacity_factor * n_tok * k_top / e), 4)
+    tk = n_tok * k_top
+    expert_flat = gate_idx.reshape(tk)                      # (TK,)
+    token_flat = jnp.repeat(jnp.arange(n_tok), k_top)       # (TK,)
+    gates_flat = gate_vals.reshape(tk)
+    # stable sort by expert; position within expert block = rank - offset
+    order = jnp.argsort(expert_flat, stable=True)
+    e_sorted = expert_flat[order]
+    t_sorted = token_flat[order]
+    g_sorted = gates_flat[order]
+    counts = jnp.bincount(expert_flat, length=e)            # (E,)
+    offsets = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(tk) - offsets[e_sorted]                # rank in expert
+    keep = pos < capacity
+    dest = e_sorted * capacity + jnp.minimum(pos, capacity - 1)  # (TK,)
+    # scatter tokens into expert buffers (dropped tokens write nothing)
+    xe = jnp.zeros((e * capacity, d), cdt)
+    xe = xe.at[jnp.where(keep, dest, e * capacity - 1)].add(
+        xt.astype(cdt)[t_sorted] * keep[:, None].astype(cdt))
+    xe = xe.reshape(e, capacity, d)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(cdt)))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(cdt))
+    ye = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(cdt))
+    # combine: gather expert outputs back to tokens, weighted by gates
+    ye_flat = ye.reshape(e * capacity, d)[dest]             # (TK, D)
+    contrib = ye_flat * (g_sorted[:, None].astype(cdt)
+                         * keep[:, None].astype(cdt))
+    out = jnp.zeros((n_tok, d), cdt).at[t_sorted].add(contrib)
+    out = out.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        out = out + apply_mlp(p["shared"], cfg, x).reshape(b, s, d)
+
+    # load-balancing aux loss (Switch): E * sum(frac_tokens * frac_prob)
+    frac_tok = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx[:, 0], e), axis=0)
+                        / n_tok)
+    me = jnp.mean(probs, axis=0)
+    fe = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32),
+                  axis=0)
+    aux = e * jnp.sum(me * fe) + 0.0 * frac_tok
+    return out, aux

@@ -1,0 +1,84 @@
+"""Binary (1-bit) linear layers executed on the PuD-style bit-plane path.
+
+The end-to-end consumer of the paper's substrate: weights (and activations)
+are binarized to {-1,+1}, bit-packed, and the matmul becomes XNOR+popcount —
+in DRAM that is a sequence of bulk NAND/NOR ops + the bit-serial popcount
+tree (repro.core.compiler.popcount_exprs); on TPU it is the
+repro.kernels.popcount_gemm Pallas kernel.  Training uses the straight-
+through estimator (STE).
+
+This is an *optional* projection mode (ModelConfig.quant_proj="binary"),
+exercised by tests/examples and the quantized-serving example; dense
+configs remain exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+
+
+def binarize_pack(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (M, K) float -> (packed sign bits (M, ceil(K/32)) uint32, scale (M,1)).
+
+    sign bit = 1 for x >= 0 (maps to +1), 0 for x < 0 (maps to -1).
+    scale = mean |x| per row (XNOR-Net style).
+    """
+    m, k = x.shape
+    scale = jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+    bits = (x >= 0).astype(jnp.uint8)
+    pad = (-k) % 32
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    return kops.pack_bits(bits), scale
+
+
+def binary_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (M, K), w: (N, K) float -> (M, N): sign(x) . sign(w)^T * scales.
+
+    Padding bits (both operands padded with sign-bit 0 == -1) contribute
+    (+1) * pad to the XNOR dot; subtract it exactly.
+    """
+    k = x.shape[-1]
+    xq, sx = binarize_pack(x)
+    wq, sw = binarize_pack(w)
+    pad = (-k) % 32
+    dots = kops.popcount_gemm(xq, wq, kind="xnor").astype(jnp.float32)
+    if pad:
+        dots = dots - pad
+    return dots * sx * sw.T
+
+
+@jax.custom_vjp
+def ste_binary_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return binary_matmul(x, w)
+
+
+def _fwd(x, w):
+    return binary_matmul(x, w), (x, w)
+
+
+def _bwd(res, g):
+    x, w = res
+    # STE: grad flows as if y = x @ w^T, clipped to the binarization range
+    gx = (g @ w) * (jnp.abs(x) <= 1.0)
+    gw = (g.T @ x) * (jnp.abs(w) <= 1.0)
+    return gx, gw
+
+
+ste_binary_matmul.defvjp(_fwd, _bwd)
+
+
+def init_binary_linear(key, in_dim: int, out_dim: int) -> dict:
+    w = jax.random.normal(key, (out_dim, in_dim), jnp.float32) \
+        / jnp.sqrt(in_dim)
+    return {"w": w}
+
+
+def apply_binary_linear(p: dict, x: jax.Array) -> jax.Array:
+    """x: (..., K) -> (..., N) through the 1-bit path."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    y = ste_binary_matmul(x2, p["w"].astype(jnp.float32))
+    return y.reshape(*lead, -1).astype(x.dtype)

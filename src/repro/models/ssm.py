@@ -1,0 +1,208 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked scan + decode step.
+
+Faithful structure per Dao & Gu 2024 (arXiv:2405.21060): input projection to
+(z, x, B, C, dt), causal depthwise conv on (x, B, C), scalar-identity state
+matrix A per head, SSD chunked computation (within-chunk quadratic dual form
++ inter-chunk state recurrence), gated output.  Sub-quadratic in sequence
+length => the SSM archs run the 500k-token long-context decode cell.
+
+Shapes: d_inner = expand*d_model, nh = d_inner/head_dim heads, state N.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dt, dense_init
+
+A_INIT_RANGE = (1.0, 16.0)
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    dt = _dt(cfg, "param")
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    conv_dim = di + 2 * ds
+    p = {
+        # fused input projection: z, x, B, C, dt
+        "w_in": dense_init(ks[0], d, 2 * di + 2 * ds + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(A_INIT_RANGE[0], A_INIT_RANGE[1],
+                                      nh)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))
+        ).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dt)},
+        "w_out": dense_init(ks[3], di, d, dt),
+    }
+    return p
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """(..., Q) -> (..., Q, Q) lower-triangular cumulative log products:
+    out[i, j] = sum_{k=j+1..i} log_a[k] for i >= j, -inf otherwise."""
+    q = log_a.shape[-1]
+    csum = jnp.cumsum(log_a, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]       # sum_{j+1..i}
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(x, dtv, a_log, bm, cm, chunk: int):
+    """SSD over chunks.
+
+    x:  (B, S, NH, HD)   inputs (already conv'd/activated)
+    dtv:(B, S, NH)       softplus'd timestep
+    a_log: (NH,)         A = -exp(a_log)
+    bm, cm: (B, S, N)    input/output state projections (1 group)
+    -> y (B, S, NH, HD)
+    """
+    b, s, nh, hd = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} must be divisible by chunk {q}"
+    nc = s // q
+
+    a = -jnp.exp(a_log)                                   # (NH,)
+    dta = dtv * a[None, None, :]                          # (B,S,NH) log decay
+    xr = x.reshape(b, nc, q, nh, hd)
+    dtr = dtv.reshape(b, nc, q, nh)
+    dar = dta.reshape(b, nc, q, nh)
+    br = bm.reshape(b, nc, q, n)
+    cr = cm.reshape(b, nc, q, n)
+
+    # ---- within-chunk (quadratic dual form) ----
+    lg = _segsum(jnp.moveaxis(dar, -1, 2))                # (B,NC,NH,Q,Q)
+    l = jnp.exp(lg)
+    scores = jnp.einsum("bcin,bcjn->bcij", cr, br)        # (B,NC,Q,Q)
+    m = scores[:, :, None, :, :] * l                      # (B,NC,NH,Q,Q)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", m, dtr, xr)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(jnp.cumsum(dar, axis=2)[:, :, -1:, :]
+                           - jnp.cumsum(dar, axis=2))     # (B,NC,Q,NH)
+    states = jnp.einsum("bcjn,bcjh,bcjh,bcjhp->bchnp",
+                        br, dtr, decay_to_end, xr)        # (B,NC,NH,N,HD)
+
+    # ---- inter-chunk recurrence (scan over chunks) ----
+    chunk_decay = jnp.exp(jnp.sum(dar, axis=2))           # (B,NC,NH)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                     # (B,NH,N,HD),(B,NH)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                 # emit PREVIOUS
+
+    init = jnp.zeros((b, nh, n, hd), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay.astype(jnp.float32), 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B,NC,NH,N,HD)
+
+    # ---- inter-chunk output ----
+    decay_from_start = jnp.exp(jnp.cumsum(dar, axis=2))   # (B,NC,Q,NH)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         cr, decay_from_start,
+                         prev_states.astype(cr.dtype))
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y, final_state
+
+
+def apply_ssm(p: dict, cfg: ModelConfig, u: jax.Array, *,
+              ssm_cache: dict | None = None,
+              valid: jax.Array | None = None,
+              ) -> tuple[jax.Array, dict | None]:
+    """u: (B, S, D) -> (out, new_cache).
+
+    Train/prefill path uses the chunked SSD; decode path (ssm_cache given,
+    S == 1) does the O(1) recurrent update.  ``valid``: optional (B, S)
+    mask — padded positions contribute nothing to the state and do not
+    decay it (dt forced to 0), so right-padded prefill is exact.
+    """
+    b, s, d = u.shape
+    cdt = _dt(cfg, "compute")
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = u @ p["w_in"].astype(cdt)                      # (B,S,2di+2ds+nh)
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [di + 2 * ds], axis=-1)
+
+    conv_w = p["conv_w"].astype(cdt)
+    conv_b = p["conv_b"].astype(cdt)
+    kw = cfg.ssm_conv
+    if ssm_cache is None or s > 1:
+        padded = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+        # causal depthwise conv as sum of shifted slices
+        conv = sum(padded[:, i:i + s, :] * conv_w[i][None, None, :]
+                   for i in range(kw)) + conv_b
+        new_conv_state = None
+        if s >= kw - 1 and kw > 1:
+            if valid is not None:
+                # window of the last kw-1 *valid* inputs (right-padded prefill)
+                s_valid = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+                new_conv_state = jax.vmap(
+                    lambda row, st: jax.lax.dynamic_slice_in_dim(
+                        row, st, kw - 1, axis=0))(padded, s_valid)
+            else:
+                new_conv_state = padded[:, -(kw - 1):, :]
+    else:
+        cs = ssm_cache["conv"].astype(cdt)                # (B, kw-1, convdim)
+        window = jnp.concatenate([cs, xbc], axis=1)       # (B, kw, convdim)
+        conv = (jnp.einsum("bkc,kc->bc", window, conv_w)
+                + conv_b)[:, None, :]
+        new_conv_state = window[:, 1:, :]
+    conv = jax.nn.silu(conv)
+    x, bm, cm = jnp.split(conv, [di, di + ds], axis=-1)
+    xh = x.reshape(b, s, nh, hd)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + p["dt_bias"][None, None, :])  # (B,S,NH)
+    if valid is not None:
+        dtv = dtv * valid[:, :, None].astype(jnp.float32)
+
+    if ssm_cache is None or s > 1:
+        y, new_state = _ssd_chunked(xh.astype(jnp.float32), dtv, p["a_log"],
+                                    bm.astype(jnp.float32),
+                                    cm.astype(jnp.float32), cfg.ssm_chunk)
+    else:
+        st = ssm_cache["state"]                           # (B,NH,N,HD) f32
+        a = -jnp.exp(p["a_log"])
+        da = jnp.exp(dtv[:, 0, :] * a[None, :])           # (B,NH)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bm[:, 0].astype(jnp.float32),
+                         dtv[:, 0, :], xh[:, 0].astype(jnp.float32))
+        st = st * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cm[:, 0].astype(jnp.float32),
+                       st)[:, None, :, :]
+        new_state = st
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(cdt)
+    # gated RMSNorm (mamba2's norm-before-out)
+    yz = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(yz.astype(jnp.float32)), -1, keepdims=True)
+    yn = (yz.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+          * p["norm"]["scale"].astype(jnp.float32)).astype(cdt)
+    out = yn @ p["w_out"].astype(cdt)
+    new_cache = None
+    if ssm_cache is not None:
+        if new_conv_state is None:      # short prefill: keep old conv state
+            new_conv_state = ssm_cache["conv"]
+        new_cache = {"state": new_state,
+                     "conv": new_conv_state.astype(ssm_cache["conv"].dtype)}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state),
+                          jnp.dtype(cfg.compute_dtype)),
+    }

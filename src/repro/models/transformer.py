@@ -1,0 +1,293 @@
+"""Config-driven decoder model covering all assigned architecture families.
+
+Layer stacking uses ``lax.scan`` over *stacked* per-layer parameters (leading
+axis = layer), which keeps the HLO size O(1) in depth — essential for the
+80-cell dry-run compile matrix (126-layer llama3-405b would otherwise
+produce gigabyte HLO).  Heterogeneous stacks (VLM cross-attention every k-th
+layer) scan over super-blocks.
+
+Entry points:
+  init_params(key, cfg)                 -> parameter pytree
+  forward(params, cfg, batch)           -> logits          (train/prefill)
+  loss_fn(params, cfg, batch)           -> (loss, metrics)
+  decode_step(params, cfg, tokens, caches, positions) -> (logits, caches)
+  init_caches(cfg, batch, s_max)        -> per-layer cache pytree
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from .layers import _dt
+
+
+# ---------------------------------------------------------------------------
+# Block = norm -> mixer (attn | ssm | hybrid | moe/mlp) -> norm -> ffn
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = _dt(cfg, "param")
+    p: dict = {"norm1": L.init_rmsnorm(cfg.d_model, dt)}
+    if cfg.block_type in ("attention", "hybrid"):
+        p["attn"] = L.init_attention(ks[0], cfg)
+    if cfg.block_type in ("ssm", "hybrid"):
+        p["ssm"] = SSM.init_ssm(ks[1], cfg)
+    if cfg.block_type == "hybrid":
+        p["attn_out_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["ssm_out_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+    if cfg.moe:
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["moe"] = MOE.init_moe(ks[2], cfg)
+    elif cfg.d_ff:
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["mlp"] = L.init_mlp(ks[3], cfg)
+    return p
+
+
+def apply_block(p: dict, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array, *, cache: dict | None = None,
+                extra_mask: jax.Array | None = None,
+                ) -> tuple[jax.Array, dict | None, jax.Array]:
+    """-> (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = L.constrain_tokens(x)
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_cache: dict | None = None
+    if cfg.block_type == "attention":
+        a, kvc = L.apply_attention(p["attn"], cfg, h, positions,
+                                   kv_cache=None if cache is None
+                                   else cache["kv"],
+                                   extra_mask=extra_mask)
+        x = x + a
+        if cache is not None:
+            new_cache = {"kv": kvc}
+    elif cfg.block_type == "ssm":
+        s_out, ssc = SSM.apply_ssm(p["ssm"], cfg, h,
+                                   ssm_cache=None if cache is None
+                                   else cache["ssm"])
+        x = x + s_out
+        if cache is not None:
+            new_cache = {"ssm": ssc}
+    else:  # hybrid: parallel attention + SSM heads, mean-combined (Hymba)
+        a, kvc = L.apply_attention(p["attn"], cfg, h, positions,
+                                   kv_cache=None if cache is None
+                                   else cache["kv"],
+                                   extra_mask=extra_mask)
+        s_out, ssc = SSM.apply_ssm(p["ssm"], cfg, h,
+                                   ssm_cache=None if cache is None
+                                   else cache["ssm"])
+        a = L.rmsnorm(p["attn_out_norm"], a, cfg.norm_eps)
+        s_out = L.rmsnorm(p["ssm_out_norm"], s_out, cfg.norm_eps)
+        x = x + 0.5 * (a + s_out)
+        if cache is not None:
+            new_cache = {"kv": kvc, "ssm": ssc}
+    if cfg.moe:
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        m, aux = MOE.apply_moe(p["moe"], cfg, h2)
+        x = x + m
+    elif cfg.d_ff:
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.apply_mlp(p["mlp"], cfg, h2)
+    return L.constrain_tokens(x), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+def _n_cross(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.cross_attn_every if cfg.cross_attn_every else 0
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    # stacked block params: vmap init over layer axis
+    n_self = cfg.n_layers - _n_cross(cfg)
+    block_keys = jax.random.split(ks[0], n_self)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    p = {
+        "embed": L.init_embedding(ks[1], cfg),
+        "blocks": blocks,
+        "final_norm": L.init_rmsnorm(cfg.d_model, _dt(cfg, "param")),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"table": L.init_embedding(ks[2], cfg)["table"]}
+    if cfg.cross_attn_every:
+        ck = jax.random.split(ks[3], _n_cross(cfg))
+        p["cross_blocks"] = jax.vmap(
+            lambda k: {"norm": L.init_rmsnorm(cfg.d_model, _dt(cfg, "param")),
+                       "xattn": L.init_cross_attention(k, cfg)})(ck)
+    return p
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    """Remat policy: 'block'/'full' recompute everything; 'block_dots'
+    saves matmul outputs and recomputes only elementwise ops (kills the
+    refwd dot FLOPs at modest activation-memory cost — §Perf)."""
+    if cfg.remat in ("block", "full"):
+        return jax.checkpoint(fn)
+    if cfg.remat == "block_dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _scan_blocks(params, cfg: ModelConfig, x, positions, *,
+                 image_embeds=None, extra_mask=None):
+    """Run the full stack (train/prefill, no cache) via lax.scan."""
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h2, _c, a = apply_block(layer_p, cfg, h, positions,
+                                extra_mask=extra_mask)
+        return (h2, aux + a), None
+
+    body_fn = _remat_wrap(cfg, body)
+
+    if not cfg.cross_attn_every:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+        return x, aux
+
+    # VLM: super-block = (cross_attn_every - 1) self blocks + 1 cross block
+    k = cfg.cross_attn_every
+    n_groups = _n_cross(cfg)
+    per_group = k - 1
+    self_blocks = jax.tree.map(
+        lambda a: a.reshape(n_groups, per_group, *a.shape[1:]),
+        params["blocks"])
+
+    def super_body(carry, group):
+        h, aux = carry
+        selfs, cross = group
+
+        def inner(c, lp):
+            hh, au = c
+            h2, _cc, a = apply_block(lp, cfg, hh, positions,
+                                     extra_mask=extra_mask)
+            return (h2, au + a), None
+
+        (h, aux), _ = jax.lax.scan(inner, (h, aux), selfs)
+        hn = L.rmsnorm(cross["norm"], h, cfg.norm_eps)
+        h = h + L.apply_cross_attention(cross["xattn"], cfg, hn,
+                                        image_embeds)
+        return (h, aux), None
+
+    super_fn = _remat_wrap(cfg, super_body)
+    (x, aux), _ = jax.lax.scan(super_fn, (x, jnp.zeros((), jnp.float32)),
+                               (self_blocks, params["cross_blocks"]))
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """batch: {"tokens": (B,S) int32, optional "positions", "image_embeds",
+    "input_embeds", "extra_mask"} -> logits (B,S,V) float32."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if "input_embeds" in batch and batch["input_embeds"] is not None:
+        x = batch["input_embeds"].astype(_dt(cfg, "compute"))
+    else:
+        x = L.embed(params["embed"], cfg, tokens)
+    x, _aux = _scan_blocks(params, cfg, x, positions,
+                           image_embeds=batch.get("image_embeds"),
+                           extra_mask=batch.get("extra_mask"))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    tab = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(tab, cfg, x)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict,
+            ) -> tuple[jax.Array, dict]:
+    """Causal LM loss with vocab-sharded-safe stable logsumexp."""
+    logits = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+    return loss, {"loss": loss, "accuracy": acc,
+                  "tokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, s_max: int,
+                dtype=jnp.bfloat16) -> dict:
+    """Per-layer caches, stacked on the layer axis for lax.scan."""
+    n_self = cfg.n_layers - _n_cross(cfg)
+
+    def one(_):
+        c = {}
+        if cfg.block_type in ("attention", "hybrid"):
+            s_eff = min(s_max, cfg.sliding_window) if cfg.sliding_window \
+                else s_max
+            c["kv"] = L.init_kv_cache(cfg, batch, s_eff, dtype)
+        if cfg.block_type in ("ssm", "hybrid"):
+            c["ssm"] = SSM.init_ssm_cache(cfg, batch)
+        return c
+
+    caches = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one(i) for i in range(n_self)]) \
+        if n_self > 1 else jax.tree.map(lambda x: x[None], one(0))
+    return caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array,
+                caches: dict, positions: jax.Array,
+                *, image_embeds=None) -> tuple[jax.Array, dict]:
+    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new caches).
+
+    Sliding-window caches use position mod window (ring buffer).
+    """
+    b, s = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens)
+
+    def body(carry, inp):
+        h = carry
+        layer_p, layer_c = inp
+        h2, new_c, _aux = apply_block(layer_p, cfg, h, positions,
+                                      cache=layer_c)
+        return h2, new_c
+
+    if not cfg.cross_attn_every:
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    else:
+        # interleave exactly as in forward: (k-1) self blocks then 1 cross
+        k = cfg.cross_attn_every
+        n_groups = _n_cross(cfg)
+        per_group = k - 1
+        regroup = lambda a: a.reshape(n_groups, per_group, *a.shape[1:])
+        self_blocks = jax.tree.map(regroup, params["blocks"])
+        caches_g = jax.tree.map(regroup, caches)
+
+        def super_body(carry, inp):
+            h = carry
+            selfs, cross, cs = inp
+            h, new_cs = jax.lax.scan(body, h, (selfs, cs))
+            hn = L.rmsnorm(cross["norm"], h, cfg.norm_eps)
+            h = h + L.apply_cross_attention(cross["xattn"], cfg, hn,
+                                            image_embeds)
+            return h, new_cs
+
+        x, new_caches = jax.lax.scan(
+            super_body, x, (self_blocks, params["cross_blocks"], caches_g))
+        new_caches = jax.tree.map(
+            lambda a: a.reshape(n_groups * per_group, *a.shape[2:]),
+            new_caches)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    tab = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(tab, cfg, x), new_caches

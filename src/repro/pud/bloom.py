@@ -1,0 +1,73 @@
+"""Bloom-filter dedup on PuD bulk ops (data-pipeline integration).
+
+Sequence-level near-duplicate filtering for the training data pipeline:
+membership bits live in a packed bit-plane; inserts are bulk ORs and probes
+are bulk ANDs — the in-DRAM accumulate/probe pattern the paper's substrate
+provides (OR-accumulate over hash planes, AND-probe for membership).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .engine import PudEngine
+
+
+def _hash_positions(keys: np.ndarray, n_hashes: int, m_bits: int,
+                    seed: int = 0) -> np.ndarray:
+    """keys: (N,) uint64 -> (N, n_hashes) positions in [0, m_bits)."""
+    out = np.empty((len(keys), n_hashes), dtype=np.int64)
+    x = keys.astype(np.uint64)
+    for h in range(n_hashes):
+        mix = (seed * 2654435761 + h * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        v = x * np.uint64(0x9E3779B97F4A7C15) + np.uint64(mix)
+        v ^= v >> np.uint64(29)
+        v *= np.uint64(0xBF58476D1CE4E5B9)
+        v ^= v >> np.uint64(32)
+        out[:, h] = (v % np.uint64(m_bits)).astype(np.int64)
+    return out
+
+
+class PudBloomFilter:
+    """Bloom filter whose bit array is a PuD bit-plane."""
+
+    def __init__(self, m_bits: int = 1 << 20, n_hashes: int = 4, *,
+                 engine: PudEngine | None = None, seed: int = 0):
+        assert m_bits % 32 == 0
+        self.m_bits = m_bits
+        self.n_hashes = n_hashes
+        self.seed = seed
+        self.engine = engine or PudEngine("jnp")
+        self.plane = jnp.zeros((1, m_bits // 32), jnp.uint32)
+
+    def _key_plane(self, keys: np.ndarray) -> jax.Array:
+        pos = _hash_positions(keys, self.n_hashes, self.m_bits, self.seed)
+        bits = np.zeros(self.m_bits, dtype=np.uint8)
+        bits[pos.reshape(-1)] = 1
+        return kops.pack_bits(jnp.asarray(bits[None, :]))
+
+    def insert(self, keys: np.ndarray) -> None:
+        """Bulk OR-accumulate the hash plane of a batch of keys."""
+        kp = self._key_plane(np.asarray(keys, dtype=np.uint64))
+        self.plane = self.engine.nary(jnp.stack([self.plane, kp]), "or")
+
+    def contains(self, keys: np.ndarray) -> np.ndarray:
+        """-> bool per key: all n_hashes bits set (AND-probe)."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        pos = _hash_positions(keys, self.n_hashes, self.m_bits, self.seed)
+        bits = np.asarray(kops.unpack_bits(self.plane))[0]
+        return bits[pos].all(axis=1)
+
+    def filter_new(self, keys: np.ndarray) -> np.ndarray:
+        """-> mask of keys NOT already present; inserts them."""
+        seen = self.contains(keys)
+        self.insert(np.asarray(keys)[~seen] if (~seen).any()
+                    else np.asarray(keys)[:0])
+        return ~seen
+
+    @property
+    def fill_fraction(self) -> float:
+        bits = np.asarray(kops.unpack_bits(self.plane))
+        return float(bits.mean())

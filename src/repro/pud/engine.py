@@ -1,0 +1,177 @@
+"""PuD engine: backend dispatch + offload accounting.
+
+The framework-facing entry point for bulk Boolean work.  Three backends
+share identical semantics:
+
+  * ``jnp``    — plain jax ops (the oracle / fastest on CPU),
+  * ``pallas`` — the packed-uint32 TPU kernels (repro.kernels),
+  * ``dram``   — the FCDRAM simulator through the ISA (command-accurate,
+                 optionally noisy; width-limited by the DRAM row).
+
+Every call is metered: the engine accumulates the DDR4 command cost the
+*same* work would incur in-DRAM versus the processor-centric baseline
+(read operands over the bus, compute, write back), quantifying the paper's
+motivation for each workload that routes through it
+(``OffloadReport``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.device import get_module
+from ..core.isa import CostModel, OpCost, PudIsa
+from ..core.simulator import BankSim
+from ..kernels import ops as kops
+
+BACKENDS = ("jnp", "pallas", "dram")
+
+
+@dataclass
+class OffloadReport:
+    """Accumulated in-DRAM vs CPU-baseline cost of engine traffic."""
+
+    ops: int = 0
+    bits: int = 0
+    dram: OpCost = field(default_factory=OpCost)
+    cpu: OpCost = field(default_factory=OpCost)
+
+    @property
+    def energy_saving(self) -> float:
+        if self.cpu.energy_pj == 0:
+            return 0.0
+        return 1.0 - self.dram.energy_pj / self.cpu.energy_pj
+
+    @property
+    def bus_bytes_avoided(self) -> int:
+        return self.cpu.bus_bytes - self.dram.bus_bytes
+
+    def summary(self) -> dict:
+        return {
+            "ops": self.ops,
+            "bits": self.bits,
+            "dram_time_us": self.dram.time_ns / 1e3,
+            "cpu_time_us": self.cpu.time_ns / 1e3,
+            "dram_energy_uj": self.dram.energy_pj / 1e6,
+            "cpu_energy_uj": self.cpu.energy_pj / 1e6,
+            "energy_saving": self.energy_saving,
+            "bus_bytes_avoided": self.bus_bytes_avoided,
+        }
+
+
+class PudEngine:
+    """Bulk-Boolean execution engine with cost metering.
+
+    Data model: *bit-planes* — uint32-packed 2D arrays (R, C) representing
+    R x 32C logical bits (one DRAM row = one plane row chunk).
+    """
+
+    def __init__(self, backend: str = "jnp", *, module: str | None = None,
+                 noisy: bool = False, seed: int = 0):
+        assert backend in BACKENDS, backend
+        self.backend = backend
+        self.module = get_module(module) if module else get_module()
+        self.cost_model = CostModel(self.module)
+        self.report = OffloadReport()
+        self.noisy = noisy
+        self._isa: PudIsa | None = None
+        if backend == "dram":
+            sim = BankSim(self.module, seed=seed,
+                          error_model="analog" if noisy else "ideal")
+            self._isa = PudIsa(sim)
+
+    # ------------- accounting -------------
+    def _meter(self, op: str, n_inputs: int, n_bits: int) -> None:
+        w = self.module.geometry.shared_bits
+        rows = max(1, -(-n_bits // w))      # DRAM rows touched per operand
+        self.report.ops += 1
+        self.report.bits += n_bits
+        if op == "not":
+            self.report.dram = self.report.dram \
+                + self.cost_model.op_not(1).scaled(rows)
+            self.report.cpu = self.report.cpu \
+                + self.cost_model.cpu_baseline(1, rows)
+        else:
+            self.report.dram = self.report.dram \
+                + self.cost_model.boolean(max(n_inputs, 2)).scaled(rows)
+            self.report.cpu = self.report.cpu \
+                + self.cost_model.cpu_baseline(max(n_inputs, 2), rows)
+
+    # ------------- ops on packed planes -------------
+    def nary(self, planes: jax.Array, op: str) -> jax.Array:
+        """planes: (N, R, C) uint32 -> (R, C)."""
+        n, r, c = planes.shape
+        self._meter(op, n, r * c * 32)
+        if self.backend == "pallas":
+            return kops.nary_bitwise(planes, op)
+        if self.backend == "dram":
+            return self._dram_nary(planes, op)
+        return kops.ref.nary_bitwise(op, planes)
+
+    def not_(self, plane: jax.Array) -> jax.Array:
+        r, c = plane.shape
+        self._meter("not", 1, r * c * 32)
+        if self.backend == "pallas":
+            return kops.bitwise_not(plane)
+        if self.backend == "dram":
+            return self._dram_not(plane)
+        return ~plane
+
+    def add(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Bit-serial adder: (K, R, C) + (K, R, C) -> (K+1, R, C)."""
+        k, r, c = a.shape
+        # 12 native ops per plane (compiler.adder_exprs)
+        self._meter("and", 2, 12 * k * r * c * 32)
+        if self.backend == "pallas":
+            return kops.add_planes(a, b)
+        if self.backend == "dram":
+            raise NotImplementedError(
+                "use repro.core.compiler.run_sim for in-DRAM arithmetic")
+        return kops.ref.add_planes(a, b)
+
+    def popcount(self, planes: jax.Array) -> jax.Array:
+        n = planes.shape[0]
+        self._meter("and", n, planes.size * 32)
+        if self.backend == "pallas":
+            return kops.bitcount_planes(planes)
+        return kops.ref.bitcount_planes(planes)
+
+    # ------------- DRAM backend plumbing -------------
+    def _dram_chunks(self, bits: np.ndarray):
+        w = self._isa.width
+        n_bits = bits.shape[-1]
+        for off in range(0, n_bits, w):
+            yield off, bits[..., off:off + w]
+
+    def _dram_nary(self, planes: jax.Array, op: str) -> jax.Array:
+        pl = np.asarray(planes)
+        n, r, c = pl.shape
+        bits = np.asarray(kops.ref.unpack_bits(jnp.asarray(pl))).reshape(
+            n, r * c * 32)
+        out = np.zeros(r * c * 32, dtype=np.uint8)
+        w = self._isa.width
+        for off, chunk in self._dram_chunks(bits):
+            ops_in = [np.pad(chunk[i], (0, w - chunk.shape[-1]))
+                      if chunk.shape[-1] < w else chunk[i] for i in range(n)]
+            res = self._isa.nary_op(op, ops_in)
+            out[off:off + chunk.shape[-1]] = res[:chunk.shape[-1]]
+        packed = kops.ref.pack_bits(jnp.asarray(out.reshape(r, c * 32)))
+        return packed
+
+    def _dram_not(self, plane: jax.Array) -> jax.Array:
+        pl = np.asarray(plane)
+        r, c = pl.shape
+        bits = np.asarray(kops.ref.unpack_bits(jnp.asarray(pl))).reshape(
+            r * c * 32)
+        out = np.zeros_like(bits)
+        w = self._isa.width
+        for off in range(0, bits.size, w):
+            chunk = bits[off:off + w]
+            src = np.pad(chunk, (0, w - chunk.size)) if chunk.size < w \
+                else chunk
+            res = self._isa.op_not(src)
+            out[off:off + chunk.size] = res[:chunk.size]
+        return kops.ref.pack_bits(jnp.asarray(out.reshape(r, c * 32)))

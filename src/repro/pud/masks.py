@@ -1,0 +1,87 @@
+"""Attention-mask composition as PuD bulk-Boolean bit-planes.
+
+Attention masks are pure Boolean structure: causal AND document AND
+sliding-window AND padding.  Composing them over (S x S) positions for long
+sequences is exactly the bulk bitwise workload FCDRAM executes in-DRAM: each
+mask is a bit-plane, the composition is one many-input AND.  The engine
+meters how much bus traffic the in-DRAM path avoids.
+
+Planes are packed uint32 (S, S/32).  ``repro.models`` consumes the unpacked
+(B, Sq, Sk) boolean form through ``compose_attention_mask``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .engine import PudEngine
+
+
+def causal_plane(s: int) -> jax.Array:
+    """(S, S/32) packed lower-triangular (causal keep) mask."""
+    q = jnp.arange(s, dtype=jnp.int32)
+    bits = (q[:, None] >= q[None, :]).astype(jnp.uint8)
+    return kops.pack_bits(bits)
+
+
+def window_plane(s: int, window: int) -> jax.Array:
+    q = jnp.arange(s, dtype=jnp.int32)
+    bits = ((q[:, None] - q[None, :]) < window).astype(jnp.uint8)
+    return kops.pack_bits(bits)
+
+
+def document_plane(doc_ids: jax.Array) -> jax.Array:
+    """doc_ids: (S,) int32 segment ids -> same-document keep plane."""
+    bits = (doc_ids[:, None] == doc_ids[None, :]).astype(jnp.uint8)
+    return kops.pack_bits(bits)
+
+
+def padding_plane(valid: jax.Array) -> jax.Array:
+    """valid: (S,) bool -> keys-valid keep plane."""
+    s = valid.shape[0]
+    bits = jnp.broadcast_to(valid.astype(jnp.uint8)[None, :], (s, s))
+    return kops.pack_bits(bits)
+
+
+def compose_mask_planes(engine: PudEngine, planes: list[jax.Array],
+                        ) -> jax.Array:
+    """Many-input AND over mask planes — one in-DRAM op per 16 planes."""
+    if len(planes) == 1:
+        return planes[0]
+    stacked = jnp.stack(planes)
+    return engine.nary(stacked, "and")
+
+
+def compose_attention_mask(engine: PudEngine, s: int, *,
+                           window: int = 0,
+                           doc_ids: jax.Array | None = None,
+                           valid: jax.Array | None = None) -> jax.Array:
+    """-> (S, S) bool keep-mask composed on the PuD engine."""
+    planes = [causal_plane(s)]
+    if window:
+        planes.append(window_plane(s, window))
+    if doc_ids is not None:
+        planes.append(document_plane(doc_ids))
+    if valid is not None:
+        planes.append(padding_plane(valid))
+    packed = compose_mask_planes(engine, planes)
+    return kops.unpack_bits(packed)[:, :s].astype(bool)
+
+
+def route_mask_planes(engine: PudEngine, gate_idx: jax.Array,
+                      n_experts: int) -> jax.Array:
+    """MoE dispatch masks as bit-planes: gate_idx (T, K) -> per-expert
+    packed token masks (E, T/32) via OR over the K one-hot planes."""
+    t, k = gate_idx.shape
+    pad = (-t) % 32
+    planes = []
+    for i in range(k):
+        oh = jax.nn.one_hot(gate_idx[:, i], n_experts,
+                            dtype=jnp.uint8).T        # (E, T)
+        if pad:
+            oh = jnp.pad(oh, ((0, 0), (0, pad)))
+        planes.append(kops.pack_bits(oh))
+    if len(planes) == 1:
+        return planes[0]
+    return engine.nary(jnp.stack(planes), "or")

@@ -1,0 +1,196 @@
+"""Batched serving engine: prefill + decode with slot-based batching.
+
+Production-serving structure in miniature:
+
+* fixed decode **slots** (the serving batch); requests are admitted into
+  free slots (continuous batching), each slot carries its own position
+  counter and EOS state;
+* **prefill** runs the full-sequence path and writes the per-layer caches
+  for one slot; **decode** advances all active slots one token per step
+  with a single jitted ``decode_step``;
+* sampling: greedy or temperature; deterministic per (seed, slot, step).
+
+SSM archs prefill with right-padding + validity masking (exact: padded
+positions neither write nor decay the state).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..models import layers as L
+from ..models import ssm as SSM
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _prefill_fn(params, cfg: ModelConfig, tokens, valid, caches):
+    """tokens: (1, S_pad); valid: (1, S_pad) -> (last logits, new caches)."""
+    real_pos = jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1
+    real_pos = jnp.maximum(real_pos, 0)
+    # pads get the sentinel: their K entries are never attended later
+    positions = jnp.where(valid, real_pos, L.POS_SENTINEL)
+    x = L.embed(params["embed"], cfg, tokens)
+
+    def body(carry, inp):
+        h = carry
+        layer_p, layer_c = inp
+        new_c = {}
+        hn = L.rmsnorm(layer_p["norm1"], h, cfg.norm_eps)
+        if cfg.block_type in ("attention", "hybrid"):
+            a, kvc = L.apply_attention(layer_p["attn"], cfg, hn, positions,
+                                       kv_cache=layer_c["kv"])
+            new_c["kv"] = kvc
+        if cfg.block_type in ("ssm", "hybrid"):
+            s_out, ssc = SSM.apply_ssm(layer_p["ssm"], cfg, hn,
+                                       ssm_cache=layer_c["ssm"], valid=valid)
+            new_c["ssm"] = ssc
+        if cfg.block_type == "attention":
+            h = h + a
+        elif cfg.block_type == "ssm":
+            h = h + s_out
+        else:
+            a = L.rmsnorm(layer_p["attn_out_norm"], a, cfg.norm_eps)
+            s_out = L.rmsnorm(layer_p["ssm_out_norm"], s_out, cfg.norm_eps)
+            h = h + 0.5 * (a + s_out)
+        if cfg.moe:
+            h2 = L.rmsnorm(layer_p["norm2"], h, cfg.norm_eps)
+            from ..models import moe as MOE
+            m, _aux = MOE.apply_moe(layer_p["moe"], cfg, h2)
+            h = h + m
+        elif cfg.d_ff:
+            h2 = L.rmsnorm(layer_p["norm2"], h, cfg.norm_eps)
+            h = h + L.apply_mlp(layer_p["mlp"], cfg, h2)
+        return h, new_c
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    tab = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(tab, cfg, x)
+    # logits at the last VALID position
+    last = jnp.sum(valid.astype(jnp.int32), axis=1) - 1        # (1,)
+    out = jnp.take_along_axis(logits, last[:, None, None], axis=1)
+    return out[:, 0, :], new_caches
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_len: int = 512, seed: int = 0,
+                 cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.seed = seed
+        self.caches = T.init_caches(cfg, n_slots, max_len, dtype=cache_dtype)
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, dtype=np.int32)
+        self.slot_next = np.zeros(n_slots, dtype=np.int32)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._rid = 0
+        self._steps = 0
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: T.decode_step(p, cfg, tok, caches,
+                                                      pos))
+        self._prefill = jax.jit(
+            lambda p, tok, valid, caches: _prefill_fn(p, cfg, tok, valid,
+                                                      caches))
+
+    # ------------- request management -------------
+    def submit(self, prompt: list[int], *, max_new_tokens: int = 32,
+               temperature: float = 0.0) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, list(prompt), max_new_tokens,
+                                  temperature))
+        return self._rid
+
+    def _slot_caches(self, slot: int):
+        return jax.tree.map(lambda c: c[:, slot:slot + 1]
+                            if c.ndim >= 2 else c, self.caches)
+
+    def _admit(self) -> None:
+        chunk = self.cfg.ssm_chunk if self.cfg.block_type in ("ssm", "hybrid") \
+            else 1
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            s = len(req.prompt)
+            s_pad = -(-s // chunk) * chunk
+            tok = np.zeros((1, s_pad), dtype=np.int32)
+            tok[0, :s] = req.prompt
+            valid = np.zeros((1, s_pad), dtype=bool)
+            valid[0, :s] = True
+            # per-layer caches are stacked (L, B, ...): slice batch axis 1
+            slot_caches = jax.tree.map(
+                lambda c: c[:, slot:slot + 1] if c.ndim >= 2 else c,
+                self.caches)
+            logits, new_slot_caches = self._prefill(
+                self.params, jnp.asarray(tok), jnp.asarray(valid),
+                slot_caches)
+            self._write_slot(slot, new_slot_caches)
+            nxt = self._sample(logits[0], req)
+            req.out_tokens.append(int(nxt))
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = s
+            self.slot_next[slot] = int(nxt)
+
+    def _write_slot(self, slot: int, slot_caches) -> None:
+        def put(full, part):
+            if full.ndim >= 2 and full.shape[1] == self.n_slots:
+                return full.at[:, slot:slot + 1].set(part.astype(full.dtype))
+            return part.astype(full.dtype)
+        self.caches = jax.tree.map(put, self.caches, slot_caches)
+
+    def _sample(self, logits: jax.Array, req: Request) -> int:
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        key = jax.random.PRNGKey(
+            (self.seed * 1_000_003 + req.rid * 7919 + len(req.out_tokens)))
+        return int(jax.random.categorical(key, logits / req.temperature))
+
+    # ------------- decode loop -------------
+    def step(self) -> None:
+        """Admit queued requests, then advance every active slot one token."""
+        self._admit()
+        active = [i for i in range(self.n_slots)
+                  if self.slot_req[i] is not None]
+        if not active:
+            return
+        toks = jnp.asarray(self.slot_next[:, None])          # (slots, 1)
+        pos = jnp.asarray(self.slot_pos[:, None])
+        logits, self.caches = self._decode(self.params, toks, self.caches,
+                                           pos)
+        self._steps += 1
+        for slot in active:
+            req = self.slot_req[slot]
+            nxt = self._sample(logits[slot, 0], req)
+            req.out_tokens.append(nxt)
+            self.slot_pos[slot] += 1
+            self.slot_next[slot] = nxt
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or self.slot_pos[slot] >= self.max_len - 1):
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[slot] = None
+
+    def run(self, max_steps: int = 1000) -> list[Request]:
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and max_steps > 0:
+            self.step()
+            max_steps -= 1
+        return self.finished

@@ -1,0 +1,57 @@
+"""Gradient compression with error feedback (cross-pod traffic reduction).
+
+At 1000+-node scale the cross-pod (DCN / inter-pod ICI) all-reduce is the
+scarcest link.  We compress gradients to int8 with per-tensor scales before
+the cross-pod reduction and keep the quantization residual in an error-
+feedback accumulator (Seide et al. / EF-SGD), which restores convergence to
+the uncompressed trajectory asymptotically.
+
+Used by repro.train.step in mode ``grad_compression="int8_ef"``: gradients
+are reduced *within* a pod at full precision (cheap ICI), quantized, summed
+across pods (4x fewer bytes on the expensive link), dequantized, and the
+residual carried to the next step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """-> (int8 values, scale).  Symmetric per-tensor quantization."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(g: jax.Array, err: jax.Array,
+                        ) -> tuple[jax.Array, jax.Array]:
+    """One error-feedback round: returns (decompressed grad, new residual).
+
+    The communication collective itself operates on the int8 payload; this
+    function defines the numerics (tested for convergence in
+    tests/test_train.py) and is inserted around the cross-pod psum by
+    repro.train.step.
+    """
+    x = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(x)
+    deq = dequantize_int8(q, scale)
+    return deq, x - deq
+
+
+def tree_compress_decompress(grads, errs):
+    out = jax.tree.map(lambda g, e: compress_decompress(g, e), grads, errs)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err

@@ -1,0 +1,116 @@
+"""Train-step builder: microbatched accumulation, clipping, optimizer,
+optional int8-error-feedback gradient compression across pods.
+
+``build_train_step(cfg, tc)`` returns a pure function
+
+    train_step(state, batch) -> (state, metrics)
+
+with ``state = {"params", "opt", "ef"?, "step"}``.  The global batch is
+split into ``tc.n_microbatches`` microbatches accumulated with
+``lax.scan`` — bounding activation memory (the per-arch knob that lets the
+big assigned configs fit HBM) while XLA overlaps the backward collectives
+of microbatch i with the compute of microbatch i+1 (latency hiding).
+
+Gradient compression: with ``grad_compression="int8_ef"`` the accumulated
+gradient is quantized to int8 with an error-feedback residual carried in
+the state *before* the optimizer.  Under GSPMD the cross-pod portion of the
+gradient all-reduce then moves int8 payloads (the `pod` axis reduction is
+expressed on the quantized tensor).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.config import ModelConfig, TrainConfig
+from . import compress as C
+from . import optim as O
+
+
+def init_state(key, cfg: ModelConfig, tc: TrainConfig) -> dict:
+    params = T.init_params(key, cfg)
+    opt_init, _ = O.make_optimizer(cfg.optimizer)
+    state = {"params": params, "opt": opt_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if tc.grad_compression == "int8_ef":
+        state["ef"] = C.ef_init(params)
+    return state
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by {n} microbatches"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def build_train_step(cfg: ModelConfig, tc: TrainConfig):
+    _, opt_update = O.make_optimizer(cfg.optimizer)
+
+    def grads_one(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True)(params, cfg, mb)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        n = tc.n_microbatches
+        if n > 1:
+            mbs = _split_microbatches(batch, n)
+
+            def acc_body(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_one(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"loss": jnp.zeros(()), "accuracy": jnp.zeros(()),
+                  "tokens": jnp.zeros(())}
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), mbs)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            metrics = jax.tree.map(lambda m: m / n, metrics)
+            metrics["tokens"] = metrics["tokens"] * n
+        else:
+            grads, metrics = grads_one(params, batch)
+
+        if tc.grad_compression == "int8_ef":
+            grads, new_ef = C.tree_compress_decompress(grads, state["ef"])
+        else:
+            new_ef = None
+
+        grads, gnorm = O.clip_by_global_norm(grads, tc.grad_clip)
+        lr = O.cosine_lr(state["step"], base_lr=tc.learning_rate,
+                         warmup=tc.warmup_steps, total=tc.total_steps)
+        if cfg.optimizer == "adamw":
+            new_params, new_opt = opt_update(
+                grads, state["opt"], params, lr=lr, beta1=tc.beta1,
+                beta2=tc.beta2, eps=tc.eps, weight_decay=tc.weight_decay)
+        else:
+            new_params, new_opt = opt_update(
+                grads, state["opt"], params, lr=lr,
+                weight_decay=tc.weight_decay)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if new_ef is not None:
+            new_state["ef"] = new_ef
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_state, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        _loss, metrics = T.loss_fn(params, cfg, batch)
+        return metrics
+    return eval_step

@@ -1,0 +1,6 @@
+"""Test env: single CPU device (the dry-run's 512-device flag is NOT set
+here by design — smoke tests and benches must see 1 device)."""
+import numpy as np
+import pytest
+
+np.seterr(over="ignore")  # uint64 hash mixing overflows intentionally

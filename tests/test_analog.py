@@ -1,0 +1,130 @@
+"""Calibrated analog model: paper-claim residuals + structural properties."""
+import numpy as np
+import pytest
+
+from repro.core import analog as A
+from repro.core import calibrate as C
+
+OPS = ("and", "nand", "or", "nor")
+NS = (2, 4, 8, 16)
+
+
+# ---------------------------------------------------------------------------
+# headline claims (abstract): tight tolerances
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,tol", [
+    ("not.1dst", 1.0), ("not.32dst", 0.5),
+    ("op.and16", 1.0), ("op.nand16", 1.0), ("op.or16", 1.0),
+    ("op.nor16", 1.0),
+    ("not.n2n_advantage", 1.0),
+    ("op.and16_minus_and2", 3.5), ("op.or2_minus_and2", 2.5),
+    ("not.dist.mid_far", 1.0), ("not.dist.far_close", 1.0),
+    ("not.speed.2133_2400", 2.0), ("not.speed.2400_2666", 2.0),
+])
+def test_headline_claims(name, tol):
+    paper, w, fn = C.CLAIMS[name]
+    model = fn(A.DEFAULT_PARAMS)
+    assert abs(model - paper) <= tol, \
+        f"{name}: model {model:.2f} vs paper {paper:.2f}"
+
+
+#: single claim the model cannot co-fit (4Gb M-die 2-input AND drop of
+#: 27.47% conflicts with the same module's NOT behavior); recorded in
+#: EXPERIMENTS.md §Calibration as the known residual.
+KNOWN_RESIDUALS = {"op.die.and2.4gb_a_vs_m"}
+
+
+def test_all_claims_within_loose_bound():
+    """No claim drifts arbitrarily: everything within 10 points except the
+    single documented known residual."""
+    for name, (paper, model, delta) in C.residuals(A.DEFAULT_PARAMS).items():
+        if name in KNOWN_RESIDUALS:
+            continue
+        assert abs(delta) <= 10.0, f"{name}: {delta:+.2f}"
+
+
+def test_monotonicity_obs11():
+    """Obs 11: average success strictly increases with input count."""
+    assert C.monotonicity_penalty(A.DEFAULT_PARAMS) == 0.0
+    for op in OPS:
+        vals = [A.boolean_success_avg(op, n) for n in NS]
+        assert all(b > a for a, b in zip(vals, vals[1:])), (op, vals)
+
+
+def test_or_beats_and_obs12():
+    for n in NS:
+        assert A.boolean_success_avg("or", n) > \
+            A.boolean_success_avg("and", n)
+
+
+# ---------------------------------------------------------------------------
+# structural properties
+# ---------------------------------------------------------------------------
+def test_success_is_probability():
+    for op in OPS:
+        for n in NS:
+            s = A.boolean_success(op, n, np.arange(n + 1))
+            assert np.all(s >= 0.0) and np.all(s <= 1.0)
+
+
+def test_not_success_decreases_with_dst_rows_obs4():
+    vals = [A.not_success(d, pattern="N2N") for d in (2, 4, 8, 16, 32)]
+    assert all(b < a for a, b in zip(vals, vals[1:]))
+
+
+def test_n2n_beats_nn_obs5():
+    for d in (2, 4, 8, 16):
+        assert A.not_success(d, pattern="N2N") > A.not_success(d, pattern="NN")
+
+
+def test_boundary_patterns_worst_obs14():
+    """AND worst at k=n or k=n-1; OR worst at k in {0, 1}."""
+    for n in (4, 16):
+        s_and = A.boolean_success("and", n, np.arange(n + 1))
+        assert np.argmin(s_and) >= n - 1
+        s_or = A.boolean_success("or", n, np.arange(n + 1))
+        assert np.argmin(s_or) <= 1
+
+
+def test_temperature_small_effect_obs17():
+    for op in OPS:
+        for n in NS:
+            d = abs(A.boolean_success_avg(op, n, temp_c=95.0)
+                    - A.boolean_success_avg(op, n, temp_c=50.0))
+            assert d < 0.03
+
+
+def test_random_pattern_hurts_obs16():
+    for op in OPS:
+        for n in NS:
+            assert A.boolean_success_avg(op, n, random_pattern=False) >= \
+                A.boolean_success_avg(op, n, random_pattern=True)
+
+
+def test_mixture_cdf_monotone():
+    xs = np.linspace(-0.3, 0.3, 101)
+    c = A.mixture_cdf(xs, 0.01, 0.05, 0.3, 0.2)
+    assert np.all(np.diff(c) >= -1e-12)
+    assert c[0] < 0.05 and c[-1] > 0.95
+
+
+def test_ideal_op_truth_tables():
+    assert list(A.op_ideal("and", 2, [0, 1, 2])) == [False, False, True]
+    assert list(A.op_ideal("nand", 2, [0, 1, 2])) == [True, True, False]
+    assert list(A.op_ideal("or", 2, [0, 1, 2])) == [False, True, True]
+    assert list(A.op_ideal("nor", 2, [0, 1, 2])) == [True, False, False]
+
+
+def test_margin_sign_structure():
+    """AND margin positive only at k=n; OR negative only at k=0."""
+    for n in NS:
+        m_and = A.op_margin("and", n, np.arange(n + 1))
+        assert np.all(m_and[:-1] < 0) and m_and[-1] > 0
+        m_or = A.op_margin("or", n, np.arange(n + 1))
+        assert m_or[0] < 0 and np.all(m_or[1:] > 0)
+
+
+def test_calibration_report_runs():
+    r = C.report(A.DEFAULT_PARAMS)
+    assert "claim,paper,model,delta" in r
+    assert len(r.splitlines()) > 30

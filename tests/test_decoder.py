@@ -1,0 +1,91 @@
+"""Row-decoder activation model: Fig. 5 coverage + structure."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decoder as D
+from repro.core import device as dev
+
+
+def test_fig5_coverage_match():
+    m = dev.get_module()
+    cov = D.coverage(m)
+    for (a, b), target in D.FIG5_COVERAGE:
+        got = cov.get(f"{a}:{b}", 0.0)
+        assert abs(got - target) < 0.005, (a, b, got, target)
+    assert abs(cov["none"] - D.NO_ACTIVATION_COVERAGE) < 0.01
+
+
+def test_determinism():
+    m = dev.get_module()
+    a1 = D.activation_pattern(m, 37, 101)
+    a2 = D.activation_pattern(m, 37, 101)
+    assert a1 == a2
+
+
+@given(rf=st.integers(0, 511), rl=st.integers(0, 511))
+@settings(max_examples=200, deadline=None)
+def test_activation_structure(rf, rl):
+    """Activated rows are aligned blocks containing the addressed rows."""
+    m = dev.get_module()
+    act = D.activation_pattern(m, rf, rl)
+    if act.n_rf == 0:
+        return
+    assert act.n_rl in (act.n_rf, 2 * act.n_rf)
+    assert rf in act.rows_f and rl in act.rows_l
+    assert act.rows_f[0] % act.n_rf == 0 or \
+        act.rows_f[0] == 512 - act.n_rf
+    assert len(act.rows_f) == act.n_rf
+    assert len(act.rows_l) == act.n_rl
+    assert act.total_rows <= m.max_simultaneous_rows
+
+
+def test_find_pair_yields_requested_pattern():
+    """Sparse patterns need a block search (the paper sweeps addresses)."""
+    m = dev.get_module()
+    for n in (2, 4, 8, 16):
+        pr = None
+        for bf in range(512 // n):
+            pr = D.find_pair(m, n, n, block_f=bf, block_l=(bf + 1) % (512 // n))
+            if pr is not None:
+                break
+        assert pr is not None, f"no {n}:{n} pair found in any block"
+        act = D.activation_pattern(m, *pr)
+        assert (act.n_rf, act.n_rl) == (n, n)
+
+
+def test_samsung_sequential_only():
+    m = dev.get_module("samsung_8gb_d_2133")
+    assert D.reachable_patterns(m) == [(1, 1)]
+    assert m.max_inputs == 0
+    assert m.supports_not
+
+
+def test_micron_no_activation():
+    m = dev.get_module("micron_8gb_b_3200")
+    assert D.reachable_patterns(m) == []
+    assert not m.supports_not
+    assert D.activation_pattern(m, 0, 1) == D.NONE_ACTIVATION
+
+
+def test_nn_only_module_has_no_n2n():
+    m = dev.get_module("hynix_8gb_m_2666")   # footnote 12: up to 8:8
+    pats = D.reachable_patterns(m)
+    assert all(a == b for a, b in pats)
+    assert max(a for a, _ in pats) == 8
+
+
+def test_module_zoo_table1():
+    """Table 1: 22 modules / 256 chips across SK Hynix + Samsung."""
+    mods = [m for m in dev.MODULE_ZOO.values()
+            if m.manufacturer != dev.Manufacturer.MICRON]
+    assert sum(m.n_modules for m in mods) == 22
+    assert sum(m.n_chips for m in mods) == 256
+
+
+def test_seed_changes_coverage_slightly_not_wildly():
+    m = dev.get_module()
+    c0 = D.coverage(m, seed=0)
+    c1 = D.coverage(m, seed=1)
+    for k in c0:
+        assert abs(c0[k] - c1[k]) < 0.01

@@ -1,0 +1,177 @@
+"""ISA + compiler: functional completeness, arithmetic synthesis, costs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compiler as CC
+from repro.core.isa import (CapabilityError, CostModel, PudIsa,
+                            inventory_for)
+from repro.core.simulator import BankSim
+
+
+@pytest.fixture(scope="module")
+def ideal():
+    sim = BankSim(row_bits=256, error_model="ideal", seed=11)
+    return PudIsa(sim)
+
+
+def _rand(w, rng):
+    return rng.integers(0, 2, w).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# functional completeness on the simulated hardware
+# ---------------------------------------------------------------------------
+def test_xor_from_nands(ideal):
+    rng = np.random.default_rng(0)
+    a, b = _rand(ideal.width, rng), _rand(ideal.width, rng)
+    assert np.array_equal(ideal.op_xor(a, b), a ^ b)
+
+
+def test_maj3(ideal):
+    rng = np.random.default_rng(1)
+    a, b, c = (_rand(ideal.width, rng) for _ in range(3))
+    assert np.array_equal(ideal.op_maj3(a, b, c), (a & b) | (c & (a | b)))
+
+
+def test_capability_limit_17_inputs(ideal):
+    rng = np.random.default_rng(2)
+    ops = [_rand(ideal.width, rng) for _ in range(17)]
+    with pytest.raises(CapabilityError):
+        ideal.nary_op("and", ops)
+
+
+def test_samsung_cannot_do_boolean_ops():
+    sim = BankSim("samsung_8gb_d_2133", row_bits=128, error_model="ideal")
+    isa = PudIsa(sim)
+    rng = np.random.default_rng(3)
+    with pytest.raises(CapabilityError):
+        isa.nary_op("and", [_rand(isa.width, rng), _rand(isa.width, rng)])
+
+
+# ---------------------------------------------------------------------------
+# expression compiler
+# ---------------------------------------------------------------------------
+@st.composite
+def exprs(draw, depth=0):
+    if depth >= 3 or draw(st.booleans()):
+        return CC.Var(f"v{draw(st.integers(0, 5))}")
+    kind = draw(st.sampled_from(["not", "and", "or", "nand", "nor", "xor",
+                                 "maj"]))
+    if kind == "not":
+        return CC.Not(draw(exprs(depth + 1)))
+    if kind == "xor":
+        return CC.Xor(draw(exprs(depth + 1)), draw(exprs(depth + 1)))
+    if kind == "maj":
+        return CC.Maj(draw(exprs(depth + 1)), draw(exprs(depth + 1)),
+                      draw(exprs(depth + 1)))
+    n = draw(st.integers(2, 4))
+    xs = [draw(exprs(depth + 1)) for _ in range(n)]
+    return {"and": CC.And, "or": CC.Or, "nand": CC.Nand,
+            "nor": CC.Nor}[kind](xs)
+
+
+def _eval_expr(e, env):
+    if isinstance(e, CC.Var):
+        return env[e.name]
+    if isinstance(e, CC.Const):
+        return np.full_like(next(iter(env.values())), int(e.value))
+    if isinstance(e, CC.Not):
+        return 1 - _eval_expr(e.x, env)
+    if isinstance(e, CC.And):
+        return np.bitwise_and.reduce([_eval_expr(x, env) for x in e.xs])
+    if isinstance(e, CC.Or):
+        return np.bitwise_or.reduce([_eval_expr(x, env) for x in e.xs])
+    if isinstance(e, CC.Nand):
+        return 1 - np.bitwise_and.reduce([_eval_expr(x, env) for x in e.xs])
+    if isinstance(e, CC.Nor):
+        return 1 - np.bitwise_or.reduce([_eval_expr(x, env) for x in e.xs])
+    if isinstance(e, CC.Xor):
+        return _eval_expr(e.a, env) ^ _eval_expr(e.b, env)
+    if isinstance(e, CC.Maj):
+        a, b, c = (_eval_expr(x, env) for x in (e.a, e.b, e.c))
+        return (a & b) | (c & (a | b))
+    raise TypeError(e)
+
+
+@given(e=exprs(), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=60, deadline=None)
+def test_compiled_program_matches_semantics(e, seed):
+    """Property: lowering preserves Boolean semantics (ideal executor)."""
+    rng = np.random.default_rng(seed)
+    w = 64
+    env = {f"v{i}": rng.integers(0, 2, w).astype(np.uint8)
+           for i in range(6)}
+    prog = CC.compile_expr(e)
+    out = CC.run_ideal(prog, env, width=w)["out"]
+    assert np.array_equal(out, _eval_expr(e, env))
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_adder_on_simulated_dram(seed):
+    """Property: K-bit in-DRAM ripple adder == integer addition."""
+    k = 6
+    rng = np.random.default_rng(seed)
+    sim = BankSim(row_bits=128, error_model="ideal", seed=seed % 97)
+    isa = PudIsa(sim)
+    a = rng.integers(0, 2, (k, isa.width)).astype(np.uint8)
+    b = rng.integers(0, 2, (k, isa.width)).astype(np.uint8)
+    prog = CC.compile_expr(CC.adder_exprs(k))
+    ins = {f"a{i}": a[i] for i in range(k)} | {f"b{i}": b[i] for i in range(k)}
+    out = CC.run_sim(prog, ins, isa)
+    got = np.stack([out[f"s{i}"] for i in range(k)] + [out["cout"]])
+    assert np.array_equal(got, CC.add_bitplanes_ideal(a, b))
+
+
+def test_popcount_synthesis():
+    n = 7
+    rng = np.random.default_rng(5)
+    xs = rng.integers(0, 2, (n, 96)).astype(np.uint8)
+    prog = CC.compile_expr(CC.popcount_exprs(n))
+    out = CC.run_ideal(prog, {f"x{i}": xs[i] for i in range(n)})
+    val = sum(out[f"c{i}"].astype(int) << i for i in range(len(out)))
+    assert np.array_equal(val, xs.sum(0))
+
+
+def test_wide_and_tree_lowering():
+    """>16-input ops lower to a fan-in tree of native ops."""
+    prog = CC.compile_expr(CC.And([CC.Var(f"i{j}") for j in range(40)]))
+    stats = prog.stats()
+    assert stats["and"] == 4            # 16+16+8 -> 3 leaves + 1 root
+    rng = np.random.default_rng(6)
+    env = {f"i{j}": rng.integers(0, 2, 32).astype(np.uint8)
+           for j in range(40)}
+    out = CC.run_ideal(prog, env)["out"]
+    assert np.array_equal(out, np.bitwise_and.reduce(list(env.values())))
+
+
+def test_cse_dedups_common_subexpressions():
+    x = CC.Xor(CC.Var("a"), CC.Var("b"))
+    prog = CC.compile_expr({"o1": x, "o2": CC.Not(x)})
+    assert prog.stats()["nand"] == 4    # xor body shared
+
+
+# ---------------------------------------------------------------------------
+# cost model: the paper's motivation quantified
+# ---------------------------------------------------------------------------
+def test_in_dram_op_beats_cpu_energy():
+    cm = CostModel()
+    for n in (2, 8, 16):
+        dram = cm.boolean(n)
+        cpu = cm.cpu_baseline(n)
+        assert dram.energy_pj < cpu.energy_pj
+        assert dram.bus_bytes == 0 and cpu.bus_bytes > 0
+
+
+def test_cost_scales_with_fanin():
+    cm = CostModel()
+    assert cm.boolean(16).energy_pj > cm.boolean(2).energy_pj
+    assert cm.cpu_baseline(16).energy_pj > 4 * cm.boolean(16).energy_pj
+
+
+def test_inventory_coverage_reflects_fig5():
+    inv = inventory_for(BankSim(row_bits=64).module, 0)
+    assert abs(inv.coverage(8, 8) - 0.2452) < 0.01
+    assert abs(inv.coverage(16, 16) - 0.2435) < 0.01
+    assert inv.coverage(3, 3) == 0.0

@@ -1,0 +1,202 @@
+"""Model correctness: decode/forward parity, flash vs exact attention,
+SSM chunked vs recurrent parity, family behaviors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+F32 = dict(param_dtype="float32", compute_dtype="float32")
+
+
+def _cfg(**kw):
+    base = dict(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                d_ff=128, vocab=128, head_dim=16, ssm_chunk=8, **F32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CONFIGS = {
+    "dense": _cfg(),
+    "qknorm": _cfg(qk_norm=True),
+    "window": _cfg(sliding_window=8),
+    "moe": _cfg(moe=True, n_experts=4, n_shared_experts=1, moe_top_k=2,
+                d_expert=32, capacity_factor=4.0),
+    "ssm": _cfg(n_heads=0, n_kv_heads=0, d_ff=0, block_type="ssm",
+                ssm_state=8, ssm_head_dim=16),
+    "hybrid": _cfg(block_type="hybrid", ssm_state=8, ssm_head_dim=16,
+                   ssm_expand=1),
+}
+
+
+@pytest.mark.parametrize("fam", list(CONFIGS))
+def test_decode_matches_forward(fam):
+    """Teacher-forcing parity: step-by-step cached decode reproduces the
+    full forward logits."""
+    cfg = CONFIGS[fam]
+    key = jax.random.PRNGKey(3)
+    params = T.init_params(key, cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab)
+    full = T.forward(params, cfg, {"tokens": toks})
+    caches = T.init_caches(cfg, B, 32, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        logits, caches = T.decode_step(params, cfg, toks[:, t:t + 1],
+                                       caches, pos)
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - full)))
+    assert err < 2e-3, f"{fam}: decode/forward mismatch {err}"
+
+
+def test_vlm_decode_matches_forward():
+    cfg = _cfg(cross_attn_every=2, n_image_tokens=4)
+    key = jax.random.PRNGKey(5)
+    params = T.init_params(key, cfg)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0, cfg.vocab)
+    img = jax.random.normal(jax.random.PRNGKey(7),
+                            (B, 4, cfg.d_model), jnp.float32)
+    full = T.forward(params, cfg, {"tokens": toks, "image_embeds": img})
+    caches = T.init_caches(cfg, B, 16, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        logits, caches = T.decode_step(params, cfg, toks[:, t:t + 1],
+                                       caches, pos, image_embeds=img)
+        outs.append(logits[:, 0])
+    err = float(jnp.max(jnp.abs(jnp.stack(outs, 1) - full)))
+    assert err < 2e-3, err
+
+
+def test_sliding_window_ring_buffer():
+    """Decode past the window: ring buffer keeps exactly the last W keys."""
+    cfg = _cfg(sliding_window=8, n_layers=1)
+    params = T.init_params(jax.random.PRNGKey(8), cfg)
+    B, S = 1, 24
+    toks = jax.random.randint(jax.random.PRNGKey(9), (B, S), 0, cfg.vocab)
+    full = T.forward(params, cfg, {"tokens": toks})
+    caches = T.init_caches(cfg, B, 64, dtype=jnp.float32)
+    # cache allocated at window size, not 64
+    assert caches["kv"]["k"].shape[2] == 8
+    outs = []
+    for t in range(S):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        logits, caches = T.decode_step(params, cfg, toks[:, t:t + 1],
+                                       caches, pos)
+        outs.append(logits[:, 0])
+    err = float(jnp.max(jnp.abs(jnp.stack(outs, 1) - full)))
+    assert err < 2e-3, err
+
+
+def test_flash_attention_vs_exact():
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 2, 256, 4, 16
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, hd)),
+                           dtype=jnp.float32) for _ in range(3))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    got = L._flash_attend(q, k, v, pos, pos)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    sc = jnp.where(mask[None, None], sc, -jnp.inf)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), v)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-5
+
+
+def test_flash_attention_sliding_window_vs_exact():
+    rng = np.random.default_rng(1)
+    B, S, H, hd, W = 1, 128, 2, 8, 16
+    q, k, v = (jnp.asarray(rng.normal(0, 1, (B, S, H, hd)),
+                           dtype=jnp.float32) for _ in range(3))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    got = L._flash_attend(q, k, v, pos, pos, sliding_window=W)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    i = jnp.arange(S)
+    mask = (i[:, None] >= i[None, :]) & (i[:, None] - i[None, :] < W)
+    sc = jnp.where(mask[None, None], sc, -jnp.inf)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), v)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-5
+
+
+def test_extra_mask_plumbs_through():
+    """Document-mask (PuD-composed) changes attention outputs."""
+    cfg = _cfg(n_layers=1)
+    params = T.init_params(jax.random.PRNGKey(10), cfg)
+    B, S = 1, 16
+    toks = jax.random.randint(jax.random.PRNGKey(11), (B, S), 0, cfg.vocab)
+    doc = jnp.asarray([[0] * 8 + [1] * 8])
+    em = (doc[:, :, None] == doc[:, None, :])
+    with_mask = T.forward(params, cfg, {"tokens": toks, "extra_mask": em})
+    without = T.forward(params, cfg, {"tokens": toks})
+    # first doc unchanged, second doc differs
+    assert float(jnp.max(jnp.abs(with_mask[:, :8] - without[:, :8]))) < 2e-4
+    assert float(jnp.max(jnp.abs(with_mask[:, 8:] - without[:, 8:]))) > 1e-3
+
+
+def test_ssd_chunked_vs_recurrent():
+    """SSD chunked scan == step-by-step recurrence (state-space duality)."""
+    cfg = CONFIGS["ssm"]
+    p = SSM.init_ssm(jax.random.PRNGKey(12), cfg)
+    B, S = 2, 32
+    u = jax.random.normal(jax.random.PRNGKey(13), (B, S, cfg.d_model))
+    full, _ = SSM.apply_ssm(p, cfg, u)
+    cache = SSM.init_ssm_cache(cfg, B)
+    outs = []
+    for t in range(S):
+        o, cache = SSM.apply_ssm(p, cfg, u[:, t:t + 1], ssm_cache=cache)
+        outs.append(o[:, 0])
+    err = float(jnp.max(jnp.abs(jnp.stack(outs, 1) - full)))
+    assert err < 1e-3, err
+
+
+def test_ssm_prefill_with_padding_exact():
+    """Right-padded prefill with validity mask == unpadded prefill state."""
+    cfg = CONFIGS["ssm"]
+    p = SSM.init_ssm(jax.random.PRNGKey(14), cfg)
+    B, S, pad = 1, 16, 8
+    u = jax.random.normal(jax.random.PRNGKey(15), (B, S, cfg.d_model))
+    up = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    valid = jnp.asarray([[True] * S + [False] * pad])
+    cache0 = SSM.init_ssm_cache(cfg, B)
+    _, c_ref = SSM.apply_ssm(p, cfg, u, ssm_cache=cache0)
+    _, c_pad = SSM.apply_ssm(p, cfg, up, ssm_cache=cache0, valid=valid)
+    err = float(jnp.max(jnp.abs(c_ref["state"] - c_pad["state"])))
+    assert err < 1e-4, err
+    err_c = float(jnp.max(jnp.abs(c_ref["conv"] - c_pad["conv"])))
+    assert err_c < 1e-5, err_c
+
+
+def test_rope_position_dependence():
+    x = jnp.ones((1, 4, 2, 16))
+    p0 = jnp.zeros((1, 4), jnp.int32)
+    p1 = jnp.arange(4)[None, :]
+    a = L.apply_rope(x, p0, 10000.0)
+    b = L.apply_rope(x, p1, 10000.0)
+    assert float(jnp.max(jnp.abs(a[:, 0] - b[:, 0]))) < 1e-6
+    assert float(jnp.max(jnp.abs(a[:, 1:] - b[:, 1:]))) > 1e-3
+
+
+def test_param_count_formula_close_to_actual():
+    for fam, cfg in CONFIGS.items():
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        formula = cfg.param_count()
+        assert abs(actual - formula) / actual < 0.15, \
+            (fam, actual, formula)
+
+
+def test_loss_mask_excludes_tokens():
+    cfg = CONFIGS["dense"]
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks,
+             "loss_mask": jnp.zeros((B, S)).at[:, :4].set(1.0)}
+    l1, m1 = T.loss_fn(params, cfg, batch)
+    assert float(m1["tokens"]) == 8.0

@@ -1,0 +1,157 @@
+"""Roofline machinery: HLO parsing, trip-count multipliers, jaxpr costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import jaxpr_cost as JC
+from repro.launch import roofline as RL
+
+HLO = """
+HloModule test
+
+%cond.1 (arg: (s32[], f32[8])) -> pred[] {
+  %arg = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %arg = (s32[], f32[8]) parameter(0)
+  %x = f32[8] get-tuple-element(%arg), index=1
+  %ar = f32[8]{0} all-reduce(%x), replica_groups={}, to_apply=%sum.1
+  %i = s32[] get-tuple-element(%arg), index=0
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+
+%sum.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8] parameter(0)
+  %ag = f32[128]{0} all-gather(%p), dimensions={0}
+  %init = (s32[], f32[8]) tuple(s32[] constant(0), %p)
+  %w = (s32[], f32[8]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8] get-tuple-element(%w), index=1
+}
+"""
+
+
+class FakeCompiled:
+    def as_text(self):
+        return HLO
+
+
+def test_shape_bytes():
+    assert RL._shape_bytes("f32[8]") == 32
+    assert RL._shape_bytes("bf16[4,4]") == 32
+    assert RL._shape_bytes("(f32[2], s32[3])") == 20
+    assert RL._shape_bytes("pred[]") == 1
+
+
+def test_trip_count_multiplier_applied():
+    """The all-reduce inside the 12-trip while counts 12x; the top-level
+    all-gather counts once.  With the bf16-widening correction on (the
+    default), f32 collective bytes are halved; raw totals are recorded."""
+    out = RL.collective_bytes(FakeCompiled(),
+                              bf16_widening_correction=False)
+    assert out["bytes"]["all-reduce"] == 12 * 32
+    assert out["bytes"]["all-gather"] == 128 * 4
+    assert out["counts"]["all-reduce"] == 12
+    assert out["total_bytes"] == 12 * 32 + 512
+    corr = RL.collective_bytes(FakeCompiled())
+    assert corr["total_bytes"] == (12 * 32 + 512) // 2
+    assert corr["total_bytes_raw_f32_widened"] == 12 * 32 + 512
+
+
+def test_computation_multipliers():
+    m = RL.computation_multipliers(HLO)
+    assert m["main"] == 1.0
+    assert m["body.1"] == 12.0
+    assert m["cond.1"] == 13.0
+    assert m["sum.1"] == 12.0      # called from body
+
+
+# ---------------------------------------------------------------------------
+# jaxpr cost walker
+# ---------------------------------------------------------------------------
+def test_jaxpr_cost_matmul_exact():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = JC.jaxpr_cost(f, a, b)
+    assert c["flops"] == 2 * 64 * 128 * 32
+
+
+def test_jaxpr_cost_scan_multiplies():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    c = JC.jaxpr_cost(f, x)
+    assert c["flops"] >= 7 * 2 * 16 ** 3
+    assert c["flops"] < 7.5 * 2 * 16 ** 3
+
+
+def test_jaxpr_cost_remat_counts_recompute():
+    def g(x):
+        return jnp.sum((x @ x) ** 2)
+
+    def f_plain(x):
+        return jax.grad(g)(x)
+
+    def f_remat(x):
+        return jax.grad(jax.checkpoint(g))(x)
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    c_plain = JC.jaxpr_cost(f_plain, x)
+    c_remat = JC.jaxpr_cost(f_remat, x)
+    assert c_remat["flops"] > c_plain["flops"]
+
+
+def test_jaxpr_cost_vs_xla_on_unrolled_model():
+    """Cross-check the walker against XLA's analysis on a scan-free fn."""
+    def f(w1, w2, x):
+        h = jnp.maximum(x @ w1, 0)
+        return jnp.sum(h @ w2)
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32)
+              for s in ((64, 128), (128, 32), (16, 64))]
+    c = JC.jaxpr_cost(f, *shapes)
+    compiled = jax.jit(f).lower(*shapes).compile()
+    xla = compiled.cost_analysis()
+    if xla and "flops" in xla:
+        assert abs(c["flops"] - xla["flops"]) / xla["flops"] < 0.25
+
+
+def test_bytes_major_below_upper():
+    def f(a, b):
+        return jnp.tanh(a @ b) * 2.0 + 1.0
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = JC.jaxpr_cost(f, a, b)
+    assert c["bytes_major"] <= c["bytes_upper"]
+    assert c["bytes_major"] > 0
+
+
+def test_roofline_terms_structure():
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+    cfg = get_config("mamba2-780m")
+    record = {
+        "jaxpr_cost": {"flops": 1e15, "bytes_major": 1e12},
+        "collectives": {"total_bytes": 1e9},
+        "cost": {"flops": 1e10},
+    }
+    t = RL.roofline_terms(record, cfg, SHAPES["train_4k"], 256)
+    assert t["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert t["compute_s"] == pytest.approx(1e15 / 256 / RL.PEAK_FLOPS)
+    assert t["collective_s"] == pytest.approx(1e9 / RL.ICI_BW)
+    assert t["roofline_fraction"] > 0

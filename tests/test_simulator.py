@@ -1,0 +1,158 @@
+"""Bank simulator: functional correctness + Monte-Carlo/closed-form parity."""
+import numpy as np
+import pytest
+
+from repro.core import analog as A
+from repro.core.isa import PudIsa
+from repro.core.simulator import BankSim, _norm_ppf
+
+
+@pytest.fixture
+def ideal():
+    sim = BankSim(row_bits=256, error_model="ideal", seed=1)
+    return PudIsa(sim)
+
+
+def _rand(w, rng):
+    return rng.integers(0, 2, w).astype(np.uint8)
+
+
+def test_norm_ppf_accuracy():
+    q = np.linspace(0.001, 0.999, 101)
+    z = _norm_ppf(q)
+    back = A.phi(z)
+    assert np.max(np.abs(back - q)) < 1e-6
+
+
+def test_write_read_roundtrip():
+    sim = BankSim(row_bits=128, error_model="ideal")
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, 128).astype(np.uint8)
+    sim.write_row(2, 7, bits)
+    assert np.array_equal(sim.read_row(2, 7), bits)
+
+
+def test_rowclone():
+    sim = BankSim(row_bits=128, error_model="ideal")
+    rng = np.random.default_rng(1)
+    bits = rng.integers(0, 2, 128).astype(np.uint8)
+    sim.write_row(0, 3, bits)
+    sim.rowclone(0, 3, 9)
+    assert np.array_equal(sim.read_row(0, 9), bits)
+    assert np.array_equal(sim.read_row(0, 3), bits)  # source restored
+
+
+def test_frac_row_is_half():
+    sim = BankSim(row_bits=64, error_model="ideal")
+    sim.frac_row(0, 5)
+    assert np.all(sim._arr(0)[5] == 0.5)
+
+
+@pytest.mark.parametrize("op", ["and", "or", "nand", "nor"])
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_ideal_truth_tables(ideal, op, n):
+    rng = np.random.default_rng(n)
+    ops = [_rand(ideal.width, rng) for _ in range(n)]
+    got = ideal.nary_op(op, ops)
+    red = np.bitwise_and.reduce if op in ("and", "nand") else \
+        np.bitwise_or.reduce
+    want = red(ops)
+    if op in ("nand", "nor"):
+        want = 1 - want
+    assert np.array_equal(got, want)
+
+
+def test_ideal_not(ideal):
+    rng = np.random.default_rng(7)
+    bits = _rand(ideal.width, rng)
+    assert np.array_equal(ideal.op_not(bits), 1 - bits)
+
+
+def test_not_multi_destination(ideal):
+    rng = np.random.default_rng(8)
+    bits = _rand(ideal.width, rng)
+    for n_dst in (2, 4, 8):
+        assert np.array_equal(ideal.op_not(bits, n_dst=n_dst), 1 - bits)
+
+
+def test_apa_then_write_obs1_semantics():
+    """§4.2 methodology: WR after APA stores the exact pattern in R_F's
+    rows and the negated pattern in the shared half of R_L's rows."""
+    sim = BankSim(row_bits=64, error_model="ideal", seed=3)
+    from repro.core.isa import inventory_for
+    inv = inventory_for(sim.module, sim.seed)
+    rf, rl = inv.choose(4, 4, 0)
+    pattern = np.tile([1, 0], 32).astype(np.float32)
+    act = sim.apa_then_write(sim.global_addr(0, rf), sim.global_addr(1, rl),
+                             pattern)
+    assert act.n_rf == 4
+    for r in act.rows_f:
+        assert np.array_equal(sim.read_row(0, r),
+                              pattern.astype(np.uint8))
+    lo, f_cols, l_cols = sim._split_cols(0, 1)
+    for r in act.rows_l:
+        got = sim.read_row(1, r)
+        assert np.array_equal(got[l_cols],
+                              1 - pattern.astype(np.uint8)[l_cols])
+
+
+def test_mc_matches_closed_form_and2():
+    """Cell-averaged Monte-Carlo success converges to the analog model
+    (region-averaged: the MC draws activation pairs across all regions)."""
+    from repro.core import calibrate as C
+    from repro.core.charz import mc_boolean_success
+    got = 100.0 * mc_boolean_success("and", 2, trials=150, row_bits=4096,
+                                     seed=5)
+    # the MC's default module is the 4Gb M-die: compare like-for-like
+    want = C._avg("and", 2, A.DEFAULT_PARAMS, die_rev="M", density_gb=4)
+    assert abs(got - want) < 4.0, (got, want)
+
+
+def test_mc_matches_closed_form_or4():
+    from repro.core import calibrate as C
+    from repro.core.charz import mc_boolean_success
+    got = 100.0 * mc_boolean_success("or", 4, trials=150, row_bits=4096,
+                                     seed=6)
+    want = C._avg("or", 4, A.DEFAULT_PARAMS, die_rev="M", density_gb=4)
+    assert abs(got - want) < 4.0, (got, want)
+
+
+def test_mc_not_matches_closed_form():
+    from repro.core import calibrate as C
+    from repro.core.charz import mc_not_success
+    got = 100.0 * mc_not_success(1, trials=150, row_bits=4096, seed=7)
+    want = C._not(1, A.DEFAULT_PARAMS, die_rev="M", density_gb=4)
+    assert abs(got - want) < 4.0, (got, want)
+
+
+def test_percell_bimodality():
+    """The cell population is heterogeneous (wide box plots, Fig. 15):
+    a reliable sub-population and a failing one coexist."""
+    from repro.core.charz import measure_cell_map
+    m = measure_cell_map("and", 2, trials=120, row_bits=2048, seed=9)
+    assert np.std(m) > 0.05                      # wide spread across cells
+    assert np.sum(m <= 0.6) > 0.02 * m.size      # a failing population
+    assert 0.5 < np.mean(m) < 0.98
+
+
+def test_percell_perfect_not_cells_obs3():
+    """Obs 3: for NOT there exist cells with 100% success over all trials."""
+    from repro.core.charz import measure_cell_map_not
+    m = measure_cell_map_not(trials=150, row_bits=2048, seed=12)
+    assert np.sum(m >= 1.0) > 0
+    assert np.mean(m) > 0.8
+
+
+def test_command_log_accumulates():
+    sim = BankSim(row_bits=64, error_model="ideal")
+    sim.write_row(0, 0, np.zeros(64, np.uint8))
+    sim.read_row(0, 0)
+    sim.frac_row(0, 1)
+    assert sim.log.counts == {"WR": 1, "RD": 1, "FRAC": 1}
+    assert sim.log.time_ns > 0 and sim.log.energy_pj > 0
+
+
+def test_neighboring_subarray_requirement():
+    sim = BankSim(row_bits=64, error_model="ideal")
+    with pytest.raises(ValueError):
+        sim.apa(sim.global_addr(0, 0), sim.global_addr(2, 0))
