@@ -3,18 +3,27 @@
 Prints CSV sections:
   * paper figures: model-vs-paper success-rate deltas (the reproduction
     scorecard; closed-form calibrated model + Monte-Carlo spot checks),
+  * trial-batched vs per-trial Monte-Carlo characterization speedup
+    (the PR-over-PR perf trajectory headline),
   * in-DRAM vs CPU cost model (the paper's motivation, Table-style),
   * kernel micro-benchmarks (packed-op throughput on this host),
   * PuD-engine offload accounting on LM workloads.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]
+
+``--json`` additionally writes machine-readable timings + success-rate
+deltas (default path BENCH_pr1.json) so CI can archive the trajectory.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 import numpy as np
+
+#: machine-readable results accumulated by the sections (--json output)
+RESULTS: dict = {"sections": {}}
 
 
 def _p(*args):
@@ -26,6 +35,8 @@ def _csv(name, rows, header):
     _p(header)
     for r in rows:
         _p(",".join(str(x) for x in r))
+    RESULTS["sections"][name] = {"header": header,
+                                 "rows": [list(r) for r in rows]}
 
 
 def fig5_coverage():
@@ -146,6 +157,67 @@ def fig17_21_op_modifiers():
     _csv("Fig21 2-input AND by die (%)", rows, "module,success")
 
 
+def charz_batched_speedup(fast=False):
+    """Trial-batched vs per-trial Monte-Carlo wall clock at equal trial
+    counts — the acceptance benchmark for the batched simulator core.
+
+    The per-trial column runs the seed's one-episode-per-trial loop
+    (``batched=False``); the batched column runs the same trial count as
+    one vectorized episode per stratified activation pair.
+    """
+    from repro.core import charz
+
+    # enough trials that the batched path's fixed per-episode costs are
+    # amortized (tg = trials/9 per stratified pair); still ~4s in fast mode
+    trials = 324 if fast else 648
+    points = [
+        ("and2", lambda b: charz.mc_boolean_success("and", 2, trials=trials,
+                                                    batched=b)),
+        ("or4", lambda b: charz.mc_boolean_success("or", 4, trials=trials,
+                                                   batched=b)),
+        ("and16", lambda b: charz.mc_boolean_success("and", 16, trials=trials,
+                                                     batched=b)),
+        ("nand16", lambda b: charz.mc_boolean_success("nand", 16,
+                                                      trials=trials,
+                                                      batched=b)),
+        ("not1", lambda b: charz.mc_not_success(1, trials=trials, batched=b)),
+        ("not8", lambda b: charz.mc_not_success(8, trials=trials, batched=b)),
+        ("cellmap_and4", lambda b: float(np.mean(charz.measure_cell_map(
+            "and", 4, trials=trials, batched=b)))),
+    ]
+    points[0][1](True)   # warm the pair inventory / caches
+    rows = []
+    tot_pt = tot_b = 0.0
+    detail = {}
+    for name, fn in points:
+        t0 = time.perf_counter()
+        v_pt = float(fn(False))
+        t_pt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        v_b = float(fn(True))
+        t_b = time.perf_counter() - t0
+        tot_pt += t_pt
+        tot_b += t_b
+        rows.append((name, trials, round(t_pt, 3), round(t_b, 3),
+                     round(t_pt / t_b, 1), round(100 * v_pt, 2),
+                     round(100 * v_b, 2), round(100 * (v_b - v_pt), 2)))
+        detail[name] = {"trials": trials, "per_trial_s": t_pt,
+                        "batched_s": t_b, "speedup": t_pt / t_b,
+                        "per_trial_success": v_pt, "batched_success": v_b}
+    speedup = tot_pt / tot_b
+    rows.append(("TOTAL", trials, round(tot_pt, 3), round(tot_b, 3),
+                 round(speedup, 1), "", "", ""))
+    _csv("Characterization MC: per-trial vs trial-batched (equal trials)",
+         rows,
+         "point,trials,per_trial_s,batched_s,speedup,"
+         "per_trial_succ,batched_succ,delta")
+    _p(f"characterization batched speedup: {speedup:.1f}x "
+       f"(target >= 10x)")
+    RESULTS["charz_speedup"] = speedup
+    RESULTS["charz_speedup_detail"] = detail
+    return speedup
+
+
 def calibration_scorecard():
     from repro.core import analog as A
     from repro.core import calibrate as C
@@ -157,6 +229,8 @@ def calibration_scorecard():
     worst = max(abs(d) for _p_, _m, d in res.values())
     n_tight = sum(1 for _p_, _m, d in res.values() if abs(d) <= 1.5)
     _p(f"claims={len(res)} within1.5pts={n_tight} worst_delta={worst:.2f}")
+    RESULTS["calibration"] = {"claims": len(res), "within_1p5": n_tight,
+                              "worst_delta": worst}
 
 
 def cost_model_table():
@@ -237,11 +311,22 @@ def pud_offload_lm():
          "metric,value")
 
 
+def _json_path(argv) -> str | None:
+    if "--json" not in argv:
+        return None
+    i = argv.index("--json")
+    if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
+        return argv[i + 1]
+    return "BENCH_pr1.json"
+
+
 def main() -> None:
     fast = "--fast" in sys.argv
-    mc = not fast
+    json_path = _json_path(sys.argv)
+    mc = True          # MC columns are cheap now that the MC is batched
     t0 = time.time()
     _p("# FCDRAM-JAX benchmark suite (one section per paper figure)")
+    RESULTS["fast"] = fast
     fig5_coverage()
     fig7_not(mc=mc)
     fig8_patterns()
@@ -250,12 +335,19 @@ def main() -> None:
     fig15_ops(mc=mc)
     fig16_kdep()
     fig17_21_op_modifiers()
+    charz_batched_speedup(fast=fast)
     calibration_scorecard()
     cost_model_table()
     reliability_planning()
     kernel_microbench(fast=fast)
     pud_offload_lm()
-    _p(f"\ntotal {time.time() - t0:.1f}s")
+    total = time.time() - t0
+    _p(f"\ntotal {total:.1f}s")
+    if json_path:
+        RESULTS["total_s"] = total
+        with open(json_path, "w") as f:
+            json.dump(RESULTS, f, indent=1, default=float)
+        _p(f"wrote {json_path}")
 
 
 if __name__ == "__main__":

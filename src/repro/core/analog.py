@@ -396,6 +396,54 @@ def boolean_success(op: str, n: int, k, *, p: AnalogParams = DEFAULT_PARAMS,
     return (1.0 - pf) * s_analog + 0.5 * pf
 
 
+def margin_offset_grid(op: str, p: AnalogParams = DEFAULT_PARAMS, *,
+                       mfr: str = "sk_hynix", density_gb: int = 4,
+                       die_rev: str = "A") -> np.ndarray:
+    """(3, 3) additive margin offsets over (compute_region, ref_region)."""
+    base, _ = _base_op(op)
+    scale = p.op_dist_scale_and if base == "and" else p.op_dist_scale_or
+    com = np.asarray(p.dist_com, dtype=np.float64)
+    ref = np.asarray(p.dist_ref, dtype=np.float64)
+    return scale * (com[:, None] + ref[None, :]) \
+        + p.die_offset(mfr, density_gb, die_rev)
+
+
+def boolean_success_grid(op: str, n: int, k=None, *,
+                         p: AnalogParams = DEFAULT_PARAMS,
+                         temp_c: float = 50.0, random_pattern: bool = True,
+                         speed_mts: int = 2666, mfr: str = "sk_hynix",
+                         density_gb: int = 4, die_rev: str = "A") -> np.ndarray:
+    """``boolean_success`` over the full 3x3 distance-region grid in one
+    vectorized evaluation: (3, 3, len(k)) for (compute_region, ref_region, k).
+
+    Identical math to calling :func:`boolean_success` per region pair (the
+    region only enters through the additive margin offset), ~9x fewer passes.
+    The batched characterization/calibration paths use this.
+    """
+    k = np.arange(n + 1) if k is None else np.asarray(k)
+    m = op_margin(op, n, k, p)                              # (K,)
+    dv = margin_offset_grid(op, p, mfr=mfr, density_gb=density_gb,
+                            die_rev=die_rev)                # (3, 3)
+    s, b, wp, wm = op_noise(op, n, p, temp_c=temp_c,
+                            random_pattern=random_pattern,
+                            speed_mts=speed_mts, mfr=mfr,
+                            density_gb=density_gb, die_rev=die_rev)
+    shift = op_shift(op, n, p)
+    x = m[None, None, :] + dv[:, :, None] - shift - p.delta_v
+    p1 = mixture_cdf(x, s, b, wp, wm)                       # (3, 3, K)
+    ideal_compute = op_ideal("and" if _base_op(op)[0] == "and" else "or", n, k)
+    s_analog = np.where(ideal_compute[None, None, :], p1, 1.0 - p1)
+    pf = op_pfloor(op, n, p, temp_c=temp_c, random_pattern=random_pattern,
+                   speed_mts=speed_mts)
+    return (1.0 - pf) * s_analog + 0.5 * pf
+
+
+def boolean_success_avg_grid(op: str, n: int, **kw) -> np.ndarray:
+    """(3, 3) cell-averaged success (k ~ Binomial(n, 1/2)) per region pair."""
+    grid = boolean_success_grid(op, n, **kw)
+    return grid @ binomial_weights(n)
+
+
 def binomial_weights(n: int) -> np.ndarray:
     return np.array([math.comb(n, i) for i in range(n + 1)],
                     dtype=np.float64) / 2.0 ** n
@@ -444,6 +492,24 @@ def not_success(n_dst: int, *, pattern: str = "N2N",
     pf = min(p.not_pf0 + p.not_pf_slope * (t - 2), 0.5)
     pf *= 1.0 + p.temp_pf * max(temp_c - 50.0, 0.0) * 0.1
     return float((1.0 - pf) * phi(z) + 0.5 * pf)
+
+
+def not_success_grid(n_dst: int, *, pattern: str = "N2N",
+                     p: AnalogParams = DEFAULT_PARAMS, temp_c: float = 50.0,
+                     speed_mts: int = 2666, mfr: str = "sk_hynix",
+                     density_gb: int = 4, die_rev: str = "A") -> np.ndarray:
+    """``not_success`` over the (src_region, dst_region) grid: (3, 3) in one
+    vectorized evaluation (identical math, region enters additively in z)."""
+    t = not_total_rows(n_dst, pattern)
+    z0 = (p.not_z0 - p.not_beta * (t - 2)) * p.not_speed_mult(speed_mts)
+    src = np.asarray(p.not_dist_src, dtype=np.float64)
+    dst = np.asarray(p.not_dist_dst, dtype=np.float64)
+    z = z0 + src[:, None] + dst[None, :] \
+        + p.not_die_offset(mfr, density_gb, die_rev)
+    z = z * (1.0 - p.not_temp_z * max(temp_c - 50.0, 0.0))
+    pf = min(p.not_pf0 + p.not_pf_slope * (t - 2), 0.5)
+    pf *= 1.0 + p.temp_pf * max(temp_c - 50.0, 0.0) * 0.1
+    return (1.0 - pf) * phi(z) + 0.5 * pf
 
 
 def not_drive_p(n_dst: int, **kw) -> float:

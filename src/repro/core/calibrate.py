@@ -34,27 +34,21 @@ _REGIONS = (CLOSE, MIDDLE, FAR)
 def _avg(op, n, p, **kw):
     """Cell-averaged success, averaged over the 3x3 distance-region grid —
     the paper's protocol averages over all tested rows, which span the
-    regions uniformly (matches the Monte-Carlo simulator's row sampling)."""
-    vals = [A.boolean_success_avg(op, n, p=p, compute_region=rc,
-                                  ref_region=rr, **kw)
-            for rc in _REGIONS for rr in _REGIONS]
-    return 100.0 * float(np.mean(vals))
+    regions uniformly (matches the Monte-Carlo simulator's row sampling).
+    One vectorized grid evaluation (the fit calls this thousands of times)."""
+    return 100.0 * float(np.mean(A.boolean_success_avg_grid(op, n, p=p, **kw)))
 
 
 def _not(n_dst, p, **kw):
-    vals = [A.not_success(n_dst, p=p, src_region=rs, dst_region=rd, **kw)
-            for rs in _REGIONS for rd in _REGIONS]
-    return 100.0 * float(np.mean(vals))
+    return 100.0 * float(np.mean(A.not_success_grid(n_dst, p=p, **kw)))
 
 
 def _not_dist_mean(p, src_region, dst_region):
     """Fig. 9 heatmap cell: mean over all tested destination-row counts."""
-    vals = [A.not_success(1, p=p, pattern="NN",
-                          src_region=src_region, dst_region=dst_region)]
-    vals += [A.not_success(d, p=p, pattern="N2N",
-                           src_region=src_region, dst_region=dst_region)
-             for d in (2, 4, 8, 16, 32)]
-    return 100.0 * float(np.mean(vals))
+    grids = [A.not_success_grid(1, p=p, pattern="NN")]
+    grids += [A.not_success_grid(d, p=p, pattern="N2N")
+              for d in (2, 4, 8, 16, 32)]
+    return 100.0 * float(np.mean([g[src_region, dst_region] for g in grids]))
 
 
 def _n2n_advantage(p):
@@ -82,24 +76,16 @@ def _temp_delta_op(op, p):
 
 
 def _op_k(op, n, k, p, **kw):
-    vals = [float(A.boolean_success(op, n, np.asarray([k]), p=p,
-                                    compute_region=rc, ref_region=rr,
-                                    **kw)[0])
-            for rc in _REGIONS for rr in _REGIONS]
-    return 100.0 * float(np.mean(vals))
+    grid = A.boolean_success_grid(op, n, np.asarray([k]), p=p, **kw)
+    return 100.0 * float(np.mean(grid))
 
 
 def _op_dist_spread(op, p):
     """Obs. 15: max-min of the (compute region x ref region) heatmap of the
     success rate averaged over n in {2,4,8,16}."""
-    vals = []
-    for rc in (CLOSE, MIDDLE, FAR):
-        for rr in (CLOSE, MIDDLE, FAR):
-            s = np.mean([A.boolean_success_avg(op, n, p=p, compute_region=rc,
-                                               ref_region=rr)
-                         for n in (2, 4, 8, 16)])
-            vals.append(s)
-    return 100.0 * (max(vals) - min(vals))
+    g = np.mean([A.boolean_success_avg_grid(op, n, p=p)
+                 for n in (2, 4, 8, 16)], axis=0)
+    return 100.0 * float(g.max() - g.min())
 
 
 CLAIMS: dict[str, tuple[float, float, Callable[[AnalogParams], float]]] = {

@@ -111,10 +111,12 @@ def _aligned_block(row: int, n: int, rows_per_subarray: int) -> tuple[int, ...]:
     return tuple(range(base, base + n))
 
 
+@lru_cache(maxsize=8192)
 def activation_pattern(module: ModuleConfig, rf: int, rl: int,
                        *, seed: int = 0) -> Activation:
     """Forward decoder model: (R_F, R_L) in neighboring subarrays ->
-    activated row sets.  Deterministic per module seed."""
+    activated row sets.  Deterministic per module seed (and cached: the
+    model is pure, and batched Monte-Carlo re-queries the same pairs)."""
     if module.activation is ActivationSupport.NONE:
         return NONE_ACTIVATION
     if module.activation is ActivationSupport.SEQUENTIAL:

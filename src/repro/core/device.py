@@ -109,6 +109,14 @@ class SubarrayGeometry:
             return 1
         return 2
 
+    def distance_regions(self, rows, *, toward_upper: bool):
+        """Vectorized :meth:`distance_region` over an array of rows."""
+        import numpy as np
+        n = self.rows_per_subarray
+        rows = np.asarray(rows)
+        pos = rows if toward_upper else (n - 1 - rows)
+        return np.minimum(pos // (n // 3), 2).astype(np.int64)
+
 
 REGION_NAMES = ("close", "middle", "far")
 

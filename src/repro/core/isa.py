@@ -229,6 +229,9 @@ class PudIsa:
         j = np.arange(sim.shared_w)
         self._f_cols = 2 * j + 1 if self.f_sub == lo else 2 * j
         self._l_cols = 2 * j + 1 if self.l_sub == lo else 2 * j
+        # same column sets as contiguous storage-layout slices (see
+        # BankSim stripe-major layout)
+        _lo, self._f_sl, self._l_sl = sim._col_slices(self.f_sub, self.l_sub)
         self._pair_cursor: dict[tuple[int, int], int] = {}
 
     # ---------------- word packing ----------------
@@ -237,17 +240,38 @@ class PudIsa:
         return self.sim.shared_w
 
     def _pack(self, bits: np.ndarray, side: str) -> np.ndarray:
+        """Word -> full row.  ``bits`` is (w,) or, on a batched sim, (T, w);
+        the packed row keeps any leading trial axis."""
         cols = self._f_cols if side == "f" else self._l_cols
-        row = np.zeros(self.sim.geom.row_bits, dtype=np.float32)
-        row[cols] = np.asarray(bits, dtype=np.float32)
+        bits = np.asarray(bits, dtype=np.float32)
+        row = np.zeros(bits.shape[:-1] + (self.sim.geom.row_bits,),
+                       dtype=np.float32)
+        row[..., cols] = bits
         return row
+
+    def _stack_words(self, words) -> np.ndarray:
+        """Stack operand words along a row axis: (n, w), or (T, n, w) when
+        any word carries a trial axis (others broadcast).  An ndarray input
+        of shape (n, w) or (n, T, w) is used as-is (no copy)."""
+        if isinstance(words, np.ndarray):
+            return np.moveaxis(words, 0, -2) if words.ndim == 3 else words
+        words = [np.asarray(w) for w in words]
+        if any(w.ndim == 2 for w in words):
+            t = max(w.shape[0] for w in words if w.ndim == 2)
+            words = [np.broadcast_to(w, (t, w.shape[-1])) for w in words]
+        return np.stack(words, axis=-2)
 
     def _unpack(self, sub: int, row: int, side: str) -> np.ndarray:
         cols = self._f_cols if side == "f" else self._l_cols
         full = self.sim.read_row(sub, row)
         self.stats.reads += 1
         self.stats.cost = self.stats.cost + self.cost_model.read_row()
-        return full[cols]
+        return full[..., cols]
+
+    def _result_word(self, sub: int, row: int, side: str) -> np.ndarray:
+        """Digital result word of one physical row: (w,), or (T, w) batched."""
+        sl = self._f_sl if side == "f" else self._l_sl
+        return self.sim.read_shared_word(sub, row, sl)
 
     def write_word(self, sub: int, row: int, bits: np.ndarray) -> None:
         side = "f" if sub == self.f_sub else "l"
@@ -272,26 +296,49 @@ class PudIsa:
         return self.inv.choose(n_rf, n_rl, scrambled % n_pairs)
 
     # ---------------- logical ops ----------------
-    def op_not(self, bits: np.ndarray, *, n_dst: int = 1,
-               pair_index: int | None = None) -> np.ndarray:
-        """In-DRAM NOT: returns the (noisy) complement of ``bits``."""
-        # choose an activation whose R_L side has exactly n_dst rows and
-        # R_F side is the smallest available (least drive load, Obs. 5)
+    def not_activation(self, n_dst: int) -> int:
+        """R_F-side row count for a NOT with ``n_dst`` destinations: the
+        smallest available (least drive load, Obs. 5)."""
         for n_rf in (max(n_dst // 2, 1), n_dst):
             if len(self.inv.pairs(n_rf, n_dst)):
-                break
-        else:
-            raise CapabilityError(f"no activation with {n_dst} dst rows")
-        if pair_index is not None:
+                return n_rf
+        raise CapabilityError(f"no activation with {n_dst} dst rows")
+
+    def op_not(self, bits: np.ndarray, *, n_dst: int = 1,
+               pair_index: int | None = None,
+               pair: tuple[int, int] | None = None) -> np.ndarray:
+        """In-DRAM NOT: returns the (noisy) complement of ``bits``.
+
+        ``bits`` is (w,) or, on a batched sim, (T, w) for per-trial inputs.
+        ``pair`` pins the exact (R_F, R_L) rows (stratified row sweeps);
+        ``pair_index`` picks from the inventory; default iterates scrambled.
+        """
+        n_rf = self.not_activation(n_dst)
+        if pair is not None:
+            rf, rl = pair
+        elif pair_index is not None:
             rf, rl = self.inv.choose(n_rf, n_dst, pair_index)
         else:
             rf, rl = self._next_pair(n_rf, n_dst)
         act = DEC.activation_pattern(self.sim.module, rf, rl,
                                      seed=self.sim.seed)
+        if act.n_rf == 0 and pair is None and pair_index is None:
+            # sequential-activation modules (Samsung) miss on ~2/3 of the
+            # address pairs the inventory lists: sweep on, like the paper
+            for _ in range(63):
+                rf, rl = self._next_pair(n_rf, n_dst)
+                act = DEC.activation_pattern(self.sim.module, rf, rl,
+                                             seed=self.sim.seed)
+                if act.n_rf:
+                    break
+        if act.n_rf == 0:
+            raise CapabilityError(
+                f"address pair ({rf}, {rl}) yields no simultaneous "
+                f"activation on {self.sim.module.name}")
         # stage source bits into every activated R_F row (they charge-share)
-        for r in act.rows_f:
-            self.sim.write_row(self.f_sub, r, self._pack(bits, "f"))
-            self.stats.writes += 1
+        self.sim.write_cols_multi(self.f_sub, act.rows_f, self._f_sl,
+                                  np.asarray(bits, dtype=np.float32)[..., None, :])
+        self.stats.writes += act.n_rf
         self.sim.apa(self.sim.global_addr(self.f_sub, rf),
                      self.sim.global_addr(self.l_sub, rl),
                      first_act_restored=True)
@@ -299,17 +346,19 @@ class PudIsa:
         self.stats.ops += 1
         self.stats.cost = self.stats.cost + self.cost_model.op_not(n_dst) \
             + self.cost_model.write_row().scaled(act.n_rf)
-        out = self.sim.snapshot_rows(self.l_sub, [act.rows_l[0]])[0]
-        return out[self._l_cols]
+        return self._result_word(self.l_sub, act.rows_l[0], "l")
 
     def nary_op(self, op: str, operands: list[np.ndarray], *,
                 pair_index: int | None = None,
+                pair: tuple[int, int] | None = None,
                 random_pattern: bool = True) -> np.ndarray:
         """Many-input AND/OR/NAND/NOR over equal-width operand words.
 
-        The decoder only expresses power-of-two N:N activations; other
-        fan-ins are padded with identity operands (all-1 rows for AND,
-        all-0 for OR) up to the next supported N.
+        Operands are (w,) or, on a batched sim, (T, w) for per-trial inputs
+        (the result then carries the same leading trial axis).  The decoder
+        only expresses power-of-two N:N activations; other fan-ins are
+        padded with identity operands (all-1 rows for AND, all-0 for OR) up
+        to the next supported N.
         """
         op = op.lower()
         if op not in ALL_OPS:
@@ -332,7 +381,9 @@ class PudIsa:
                             dtype=np.uint8)
             operands = list(operands) + [ident] * (n_hw - n)
             n = n_hw
-        if pair_index is not None:
+        if pair is not None:
+            rf, rl = pair
+        elif pair_index is not None:
             rf, rl = self.inv.choose(n, n, pair_index)
         else:
             rf, rl = self._next_pair(n, n)
@@ -341,17 +392,16 @@ class PudIsa:
         assert act.n_rf == n and act.n_rl == n
         # reference block: N-1 constants + one Frac row (§6.1.2)
         const = 1.0 if base == "and" else 0.0
-        for r in act.rows_f[:-1]:
-            self.sim.write_row(self.f_sub, r,
-                               np.full(self.sim.geom.row_bits, const,
-                                       dtype=np.float32))
-            self.stats.writes += 1
+        self.sim.fill_rows(self.f_sub, act.rows_f[:-1], const,
+                           cols=self._f_sl)
+        self.stats.writes += act.n_rf - 1
         self.sim.frac_row(self.f_sub, act.rows_f[-1])
         self.stats.fracs += 1
-        # compute block: operands
-        for r, bits in zip(act.rows_l, operands):
-            self.sim.write_row(self.l_sub, r, self._pack(bits, "l"))
-            self.stats.writes += 1
+        # compute block: operands (one strided scatter for all rows)
+        stack = self._stack_words(operands)
+        self.sim.write_cols_multi(self.l_sub, act.rows_l[:len(operands)],
+                                  self._l_sl, stack)
+        self.stats.writes += len(operands)
         self.sim.op_boolean(op, self.sim.global_addr(self.f_sub, rf),
                             self.sim.global_addr(self.l_sub, rl),
                             random_pattern=random_pattern)
@@ -359,10 +409,8 @@ class PudIsa:
         self.stats.ops += 1
         self.stats.cost = self.stats.cost + self.cost_model.boolean(n)
         if is_ref:   # NAND/NOR lands in the reference subarray rows
-            out = self.sim.snapshot_rows(self.f_sub, [act.rows_f[0]])[0]
-            return out[self._f_cols]
-        out = self.sim.snapshot_rows(self.l_sub, [act.rows_l[0]])[0]
-        return out[self._l_cols]
+            return self._result_word(self.f_sub, act.rows_f[0], "f")
+        return self._result_word(self.l_sub, act.rows_l[0], "l")
 
     # composite ops (functional completeness in action) ------------------
     def op_xor(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:

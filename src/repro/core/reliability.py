@@ -35,14 +35,9 @@ def best_regions(op: str, n: int, *, p: AnalogParams | None = None,
                  **kw) -> tuple[int, int, float]:
     """-> (compute_region, ref_region, success) maximizing mean success."""
     p = p or A.DEFAULT_PARAMS
-    best = None
-    for rc in REGIONS:
-        for rr in REGIONS:
-            s = A.boolean_success_avg(op, n, p=p, compute_region=rc,
-                                      ref_region=rr, **kw)
-            if best is None or s > best[2]:
-                best = (rc, rr, s)
-    return best
+    g = A.boolean_success_avg_grid(op, n, p=p, **kw)
+    rc, rr = divmod(int(np.argmax(g)), g.shape[1])
+    return rc, rr, float(g[rc, rr])
 
 
 def vote_success(p_bit: float, r: int) -> float:

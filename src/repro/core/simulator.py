@@ -26,6 +26,21 @@ a given cell behaves consistently across trials — the paper's bimodal
 box-plot populations and Obs. 3), plus per-trial noise and the
 activation-failure floor.  Cell-averaged Monte-Carlo success converges to the
 closed-form ``analog.boolean_success`` (tested in tests/test_simulator.py).
+
+Trial batching
+--------------
+``BankSim(trials=T)`` simulates ``T`` independent Monte-Carlo repetitions of
+the *same* command sequence in one pass: cell state is stored as
+``(T, rows, row_bits)`` and every command (``apa``, ``op_not``,
+``op_boolean``, RowClone, Frac, WR/RD) broadcasts across the leading trial
+axis.  This mirrors the paper's measurement protocol — each (row pair, input
+pattern) configuration is repeated many times — and replaces T Python-level
+episodes with one vectorized one (the ~10-100x hot path of
+``repro.core.charz``).  Static per-SA offsets are shared across trials (they
+model process variation of one physical chip); per-trial noise, floor flips
+and coins are drawn ``(T, w)`` at once.  With ``trials=None`` (default) the
+simulator runs a single trial and keeps the seed-compatible scalar API:
+identical RNG consumption, identical results, rows returned as 1-D arrays.
 """
 from __future__ import annotations
 
@@ -36,7 +51,7 @@ import numpy as np
 
 from . import analog as A
 from . import decoder as DEC
-from .analog import AnalogParams, MIDDLE
+from .analog import AnalogParams
 from .device import (ActivationSupport, DRAMTimings, ModuleConfig,
                      SubarrayGeometry, get_module, timings_for, ENERGY_PJ,
                      VIOLATED_TRAS_NS, VIOLATED_TRP_NS)
@@ -85,10 +100,11 @@ class CommandLog:
     energy_pj: float = 0.0
     counts: dict = field(default_factory=dict)
 
-    def add(self, cmd: str, t_ns: float, e_pj: float) -> None:
-        self.time_ns += t_ns
-        self.energy_pj += e_pj
-        self.counts[cmd] = self.counts.get(cmd, 0) + 1
+    def add(self, cmd: str, t_ns: float, e_pj: float,
+            count: int = 1) -> None:
+        self.time_ns += t_ns * count
+        self.energy_pj += e_pj * count
+        self.counts[cmd] = self.counts.get(cmd, 0) + count
 
     def reset(self) -> None:
         self.time_ns = 0.0
@@ -102,7 +118,8 @@ class BankSim:
     def __init__(self, module: ModuleConfig | str | None = None, *,
                  row_bits: int | None = None, seed: int = 0,
                  params: AnalogParams | None = None, temp_c: float = 50.0,
-                 error_model: str = "analog"):
+                 error_model: str = "analog", trials: int | None = None,
+                 track_unshared: bool = True):
         self.module = (get_module(module) if isinstance(module, str)
                        else module or get_module())
         geom = self.module.geometry
@@ -116,9 +133,37 @@ class BankSim:
         assert error_model in ("analog", "mean", "ideal", "none")
         self.error_model = error_model
         self.seed = seed
+        if trials is not None and trials < 1:
+            raise ValueError(f"trials must be >= 1, got {trials}")
+        #: None = legacy scalar API (rows are 1-D); int T = batched trials
+        #: (rows carry a leading (T,) axis).  Internally state is always 3-D.
+        self.trials = trials
+        self._T = 1 if trials is None else int(trials)
+        # float32 noise on the batched path (2x less bandwidth, stats-only);
+        # float64 in scalar mode keeps bit-exact legacy RNG consumption.
+        self._noise_dtype = np.float64 if trials is None else np.float32
+        #: False skips the same-subarray MAJ restore of *non-shared*
+        #: columns after an APA.  That state never feeds back into
+        #: shared-column results (operand/reference rows are fully re-staged
+        #: before every op), so word-level outputs follow the identical
+        #: distribution.  The batched MC uses this; keep True when full-row
+        #: snapshots must be cell-accurate.
+        self.track_unshared = track_unshared
         self._subarrays: dict[int, np.ndarray] = {}
+        self._rowmap: dict[int, np.ndarray] = {}
+        self._nrows: dict[int, int] = {}
         self._static: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._trial = 0
+        # stripe-major internal column layout: storage position j < w holds
+        # physical column 2j+1 (the lower-stripe shared set), position w+j
+        # holds column 2j.  Shared-column access — the hot path — is then a
+        # contiguous slab; physical order is materialized only on full-row
+        # reads/writes.
+        w = self.geom.row_bits // 2
+        self._perm = np.concatenate([np.arange(self.geom.row_bits)[1::2],
+                                     np.arange(self.geom.row_bits)[0::2]])
+        self._invperm = np.empty(self.geom.row_bits, dtype=np.int64)
+        self._invperm[self._perm] = np.arange(self.geom.row_bits)
         self.log = CommandLog()
 
     # ---------------- geometry helpers ----------------
@@ -126,14 +171,84 @@ class BankSim:
     def shared_w(self) -> int:
         return self.geom.row_bits // 2
 
-    def _arr(self, sub: int) -> np.ndarray:
+    @property
+    def batched(self) -> bool:
+        return self.trials is not None
+
+    # ---------------- compact row-remapped cell storage ----------------
+    # Physical row addresses map to densely-allocated slots of a
+    # (T, slots, row_bits) buffer per subarray: a bank exposes 512 rows but
+    # a Monte-Carlo run touches a few dozen, and dense slots keep the
+    # trial-batched gathers/scatters contiguous instead of striding a
+    # (T, 512, row_bits) arena.  Unwritten rows read as 0 V (cold cells).
+    def _map_rows(self, sub: int, rows) -> np.ndarray:
+        """Slot indices of physical rows, allocating slots on first touch."""
         if not 0 <= sub < self.geom.subarrays_per_bank:
             raise IndexError(f"subarray {sub} out of range")
+        rows = np.atleast_1d(np.asarray(rows, dtype=np.int64))
+        if rows.size and (rows.min() < 0
+                          or rows.max() >= self.geom.rows_per_subarray):
+            raise IndexError(f"row out of range in {rows}")
+        rmap = self._rowmap.get(sub)
+        if rmap is None:
+            rmap = self._rowmap[sub] = np.full(
+                self.geom.rows_per_subarray, -1, dtype=np.int64)
+            self._nrows[sub] = 0
+        idx = rmap[rows]
+        fresh = idx < 0
+        if np.any(fresh):
+            new_rows = rows[fresh]
+            start = self._nrows[sub]
+            rmap[new_rows] = np.arange(start, start + new_rows.size)
+            self._nrows[sub] = start + new_rows.size
+            buf = self._subarrays.get(sub)
+            cap = 0 if buf is None else buf.shape[1]
+            if self._nrows[sub] > cap:
+                new_cap = min(max(16, 2 * cap, self._nrows[sub]),
+                              self.geom.rows_per_subarray)
+                new_buf = np.zeros((self._T, new_cap, self.geom.row_bits),
+                                   dtype=np.float32)
+                if buf is not None:
+                    new_buf[:, :cap] = buf
+                self._subarrays[sub] = new_buf
+            idx = rmap[rows]
+        return idx
+
+    def _row(self, sub: int, row: int) -> int:
+        return int(self._map_rows(sub, row)[0])
+
+    def recycle_rows(self) -> None:
+        """Forget all row-slot assignments; slot buffers are kept and reused
+        (contents become don't-care).  Safe whenever subsequent ops re-stage
+        every row they read — the Monte-Carlo harness does this between
+        activation-pair groups to keep the hot working set bounded by one
+        op's row count instead of growing with every new pair."""
+        for sub, rmap in self._rowmap.items():
+            rmap.fill(-1)
+            self._nrows[sub] = 0
+
+    def _cells(self, sub: int) -> np.ndarray:
+        """(T, slots, row_bits) backing buffer (slot order = first touch)."""
         if sub not in self._subarrays:
-            self._subarrays[sub] = np.zeros(
-                (self.geom.rows_per_subarray, self.geom.row_bits),
-                dtype=np.float32)
+            self._map_rows(sub, [0])    # force allocation
         return self._subarrays[sub]
+
+    def _arr(self, sub: int) -> np.ndarray:
+        """Cell voltages in *physical* row order: (rows, row_bits) in scalar
+        mode, (T, rows, row_bits) batched.  A materialized snapshot (the
+        backing store is slot-compacted) — read-only debug/inspection aid."""
+        out = np.zeros((self._T, self.geom.rows_per_subarray,
+                        self.geom.row_bits), dtype=np.float32)
+        rmap = self._rowmap.get(sub)
+        if rmap is not None:
+            live = np.nonzero(rmap >= 0)[0]
+            out[:, live] = self._subarrays[sub][:, rmap[live]][
+                ..., self._invperm]
+        return out if self.batched else out[0]
+
+    def _out(self, rows: np.ndarray) -> np.ndarray:
+        """Strip the trial axis in legacy scalar mode."""
+        return rows if self.batched else rows[0]
 
     def _static_latents(self, stripe: int) -> tuple[np.ndarray, np.ndarray]:
         """Two per-SA uniforms for the static offset mixture of a stripe."""
@@ -165,29 +280,69 @@ class BankSim:
 
     # ---------------- standard commands ----------------
     def write_row(self, sub: int, row: int, bits: np.ndarray) -> None:
-        arr = self._arr(sub)
+        """Write a row; ``bits`` is (row_bits,) — broadcast to all trials —
+        or (T, row_bits) for per-trial contents in batched mode."""
         bits = np.asarray(bits)
-        if bits.shape != (self.geom.row_bits,):
-            raise ValueError(f"row is {self.geom.row_bits} bits, got {bits.shape}")
-        arr[row] = bits.astype(np.float32)
+        w = self.geom.row_bits
+        if bits.shape != (w,) and bits.shape != (self._T, w):
+            raise ValueError(
+                f"row is {w} bits (optionally with a leading {self._T}-trial "
+                f"axis), got {bits.shape}")
+        i = self._row(sub, row)
+        self._cells(sub)[:, i] = bits[..., self._perm].astype(np.float32)
         t = self.timings
         n_bursts = self.geom.row_bits // 512  # 64B bursts per chip-row
         self.log.add("WR", t.tRCD + t.tWR + t.tRP,
                      ENERGY_PJ["act"] + ENERGY_PJ["pre"]
                      + n_bursts * ENERGY_PJ["wr_per_64B"])
 
+    def _log_wr(self, n_rows: int = 1) -> None:
+        t = self.timings
+        n_bursts = self.geom.row_bits // 512
+        self.log.add("WR", t.tRCD + t.tWR + t.tRP,
+                     ENERGY_PJ["act"] + ENERGY_PJ["pre"]
+                     + n_bursts * ENERGY_PJ["wr_per_64B"], count=n_rows)
+
+    def write_cols_multi(self, sub: int, rows, cols,
+                         bits: np.ndarray) -> None:
+        """WR of one packed word per row in one strided scatter.
+
+        ``bits`` is (n_rows, w) or (T, n_rows, w); each slice lands on
+        ``cols`` of the matching row (the batched operand-staging hot path).
+        """
+        idx = self._map_rows(sub, rows)
+        arr = self._cells(sub)
+        if self.track_unshared:
+            arr[:, idx] = 0.0
+        arr[:, idx, cols] = np.asarray(bits, dtype=np.float32)
+        self._log_wr(len(idx))
+
+    def fill_rows(self, sub: int, rows, value: float,
+                  cols=slice(None)) -> None:
+        """WR of constant rows (reference-block staging).  With
+        ``track_unshared=False`` callers may restrict to the observed
+        columns."""
+        idx = self._map_rows(sub, rows)
+        if not self.track_unshared and cols != slice(None):
+            self._cells(sub)[:, idx, cols] = value
+        else:
+            self._cells(sub)[:, idx] = value
+        self._log_wr(len(idx))
+
     def read_row(self, sub: int, row: int) -> np.ndarray:
-        arr = self._arr(sub)
+        i = self._row(sub, row)
+        arr = self._cells(sub)
         t = self.timings
         n_bursts = self.geom.row_bits // 512
         self.log.add("RD", t.tRCD + t.tCL + t.tRP,
                      ENERGY_PJ["act"] + ENERGY_PJ["pre"]
                      + n_bursts * ENERGY_PJ["rd_per_64B"])
-        return (arr[row] > 0.5).astype(np.uint8)
+        return self._out((arr[:, i][..., self._invperm] > 0.5)
+                         .astype(np.uint8))
 
     def frac_row(self, sub: int, row: int) -> None:
         """FracDRAM: store VDD/2 in every cell of the row."""
-        self._arr(sub)[row] = 0.5
+        self._cells(sub)[:, self._row(sub, row)] = 0.5
         t = self.timings
         # Frac = ACT -> PRE with violated tRAS, twice (per FracDRAM)
         self.log.add("FRAC", 2 * (VIOLATED_TRAS_NS + t.tRP),
@@ -195,9 +350,11 @@ class BankSim:
 
     def rowclone(self, sub: int, src: int, dst: int) -> None:
         """Same-subarray RowClone (sequential ACT -> PRE -> ACT)."""
-        arr = self._arr(sub)
-        arr[dst] = (arr[src] > 0.5).astype(np.float32)
-        arr[src] = (arr[src] > 0.5).astype(np.float32)  # restored
+        isrc, idst = self._map_rows(sub, [src, dst])
+        arr = self._cells(sub)
+        restored = (arr[:, isrc] > 0.5).astype(np.float32)
+        arr[:, idst] = restored
+        arr[:, isrc] = restored  # source restored
         t = self.timings
         self.log.add("RC", t.tRAS + VIOLATED_TRP_NS + t.tRAS + t.tRP,
                      2 * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"])
@@ -215,10 +372,31 @@ class BankSim:
         l_cols = lo_cols if l_sub == lo else hi_cols
         return lo, f_cols, l_cols
 
+    def _col_slices(self, f_sub: int, l_sub: int):
+        """Shared columns as contiguous *storage-layout* slices: the same
+        column sets ``_split_cols`` returns as physical index arrays, in the
+        same j order, but contiguous in the stripe-major layout."""
+        if abs(f_sub - l_sub) != 1:
+            raise ValueError("APA requires *neighboring* subarrays")
+        lo = min(f_sub, l_sub)
+        w = self.shared_w
+        lo_sl, hi_sl = slice(0, w), slice(w, 2 * w)
+        return (lo, lo_sl if f_sub == lo else hi_sl,
+                lo_sl if l_sub == lo else hi_sl)
+
+    def _other_slice(self, sl: slice) -> slice:
+        """The complementary column half (non-shared, storage layout)."""
+        w = self.shared_w
+        return slice(w, 2 * w) if sl.start == 0 else slice(0, w)
+
     def _resolve(self, margin: np.ndarray, stripe: int, op: str, n: int, *,
                  regions: tuple[int, int], random_pattern: bool,
                  rng: np.random.Generator) -> np.ndarray:
-        """Sense-amp comparator outcome (bool per shared column)."""
+        """Sense-amp comparator outcome (bool per (trial, shared column)).
+
+        ``margin`` is (T, w); static offsets broadcast across trials (one
+        physical chip), noise/floor draws are per-trial.
+        """
         p = self.params
         if self.error_model in ("ideal", "none", "mean"):
             return margin > 0.0
@@ -234,32 +412,39 @@ class BankSim:
             density_gb=self.module.density_gb, die_rev=self.module.die_rev)
         shift = A.op_shift(op, n, p)
         static = self.static_offsets(stripe, op, n,
-                                     random_pattern=random_pattern)
-        trial = math.sqrt(max(1.0 - STATIC_SPLIT ** 2, 0.0)) * s \
-            * rng.standard_normal(margin.shape)
-        out = margin + dv - shift - p.delta_v + static + trial > 0.0
+                                     random_pattern=random_pattern) \
+            .astype(self._noise_dtype, copy=False)
+        acc = rng.standard_normal(margin.shape, dtype=self._noise_dtype)
+        acc *= math.sqrt(max(1.0 - STATIC_SPLIT ** 2, 0.0)) * s
+        acc += margin
+        acc += static
+        out = acc > -(dv - shift - p.delta_v)
         pf = A.op_pfloor(op, n, p, temp_c=self.temp_c,
                          random_pattern=random_pattern,
                          speed_mts=self.module.speed_mts)
-        flip = rng.random(margin.shape) < pf
-        coin = rng.random(margin.shape) < 0.5
+        if self.batched:
+            # one uniform: conditioned on u < pf, (u < pf/2) is a fair coin
+            u = rng.random(margin.shape, dtype=self._noise_dtype)
+            return np.where(u < pf, u < 0.5 * pf, out)
+        flip = rng.random(margin.shape, dtype=self._noise_dtype) < pf
+        coin = rng.random(margin.shape, dtype=self._noise_dtype) < 0.5
         return np.where(flip, coin, out)
 
-    def _maj_restore(self, sub: int, rows, cols: np.ndarray,
+    def _maj_restore(self, sub: int, rows, cols: slice,
                      rng: np.random.Generator) -> None:
         """Same-subarray multi-row activation on non-shared columns: cells
         charge-share against VDD/2 and the (other-stripe) SA restores the
         majority value into all activated cells (prior works' MAJ)."""
-        arr = self._arr(sub)
+        arr = self._cells(sub)
+        rows = np.asarray(rows)     # slot indices (pre-translated by apa)
         n = len(rows)
         u = A.u_n(n, self.params)
-        v = u * np.sum(arr[np.asarray(rows)][:, cols] - 0.5, axis=0)
+        v = u * (np.sum(arr[:, rows, cols], axis=1) - 0.5 * n)
         if self.error_model == "analog":
             s = self.params.sigma_sa
-            v = v + s * rng.standard_normal(v.shape)
+            v = v + s * rng.standard_normal(v.shape, dtype=self._noise_dtype)
         out = (v > 0.0).astype(np.float32)
-        for r in rows:
-            arr[r, cols] = out
+        arr[:, rows, cols] = out[:, None, :]
 
     def apa(self, rf_global: int, rl_global: int, *,
             first_act_restored: bool = False,
@@ -286,10 +471,10 @@ class BankSim:
         if self.module.activation is ActivationSupport.SEQUENTIAL \
                 and not first_act_restored:
             return act  # sequential activation cannot charge-share both sides
-        stripe, f_cols, l_cols = self._split_cols(f_sub, l_sub)
-        arr_f, arr_l = self._arr(f_sub), self._arr(l_sub)
-        rows_f = np.asarray(act.rows_f)
-        rows_l = np.asarray(act.rows_l)
+        stripe, f_cols, l_cols = self._col_slices(f_sub, l_sub)
+        rows_f = self._map_rows(f_sub, act.rows_f)
+        rows_l = self._map_rows(l_sub, act.rows_l)
+        arr_f, arr_l = self._cells(f_sub), self._cells(l_sub)
         rng = self._rng()
         geom = self.geom
         reg_f = geom.distance_region(f_row, toward_upper=f_sub > l_sub)
@@ -299,8 +484,9 @@ class BankSim:
             # ---- NOT protocol: R_F drives, R_L receives the complement ----
             n_src = act.n_rf
             u = A.u_n(n_src, self.params)
-            v_src = 0.5 + u * np.sum(arr_f[rows_f][:, f_cols] - 0.5, axis=0)
-            src_bit = v_src > 0.5
+            v_src = 0.5 + u * (np.sum(arr_f[:, rows_f, f_cols], axis=1)
+                               - 0.5 * n_src)
+            src_bit = v_src > 0.5                       # (T, w)
             if self.error_model == "analog":
                 p_ok = A.not_success(
                     act.n_rl, pattern=("N2N" if act.kind == "N:2N" else "NN"),
@@ -317,24 +503,26 @@ class BankSim:
                 xi1, _xi2 = self._static_latents(stripe)
                 a = _norm_ppf(np.clip(p_ok, 1e-9, 1 - 1e-9)) \
                     * math.sqrt(1.0 + spread ** 2)
-                z = A.phi(a + spread * _norm_ppf(xi1))
-                ok = rng.random(self.shared_w) < z
+                z = A.phi(a + spread * _norm_ppf(xi1)) \
+                    .astype(self._noise_dtype, copy=False)  # (w,) per-cell
+                ok = rng.random(src_bit.shape, dtype=self._noise_dtype) < z
             else:
-                ok = np.ones(self.shared_w, dtype=bool)
+                ok = np.ones(src_bit.shape, dtype=bool)
             dst_bit = np.where(ok, ~src_bit, src_bit).astype(np.float32)
-            for r in rows_l:
-                arr_l[r, l_cols] = dst_bit
-            for r in rows_f:
-                arr_f[r, f_cols] = src_bit.astype(np.float32)
+            src_f = src_bit.astype(np.float32)
+            arr_l[:, rows_l, l_cols] = dst_bit[:, None, :]
+            arr_f[:, rows_f, f_cols] = src_f[:, None, :]
         else:
             # ---- Boolean-op protocol: comparator across the stripe ----
             n_f, n_l = act.n_rf, act.n_rl
             u_f = A.u_n(n_f, self.params)
             u_l = A.u_n(n_l, self.params)
-            v_f = u_f * np.sum(arr_f[rows_f][:, f_cols] - 0.5, axis=0)
-            v_l = u_l * np.sum(arr_l[rows_l][:, l_cols] - 0.5, axis=0)
+            v_f = u_f * (np.sum(arr_f[:, rows_f, f_cols], axis=1)
+                         - 0.5 * n_f)
+            v_l = u_l * (np.sum(arr_l[:, rows_l, l_cols], axis=1)
+                         - 0.5 * n_l)
             # margin convention: compute side (R_L, §6) minus reference (R_F)
-            margin = v_l - v_f
+            margin = v_l - v_f                          # (T, w)
             # noise context: the reference level sets the common mode
             # (V_REF > VDD/2 -> AND-family, < VDD/2 -> OR-family)
             op_ctx = "and" if float(np.mean(v_f)) >= 0.0 else "or"
@@ -342,15 +530,15 @@ class BankSim:
                                 regions=(reg_l, reg_f),
                                 random_pattern=random_pattern, rng=rng)
             outf = out.astype(np.float32)
-            for r in rows_l:
-                arr_l[r, l_cols] = outf          # compute side: result
-            for r in rows_f:
-                arr_f[r, f_cols] = 1.0 - outf    # reference side: complement
+            arr_l[:, rows_l, l_cols] = outf[:, None, :]
+            arr_f[:, rows_f, f_cols] = (1.0 - outf)[:, None, :]
         # non-shared columns: same-subarray restore (MAJ against VDD/2)
-        other_f = np.setdiff1d(np.arange(geom.row_bits), f_cols)
-        other_l = np.setdiff1d(np.arange(geom.row_bits), l_cols)
-        self._maj_restore(f_sub, act.rows_f, other_f, rng)
-        self._maj_restore(l_sub, act.rows_l, other_l, rng)
+        other_f, other_l = self._other_slice(f_cols), self._other_slice(l_cols)
+        if self.track_unshared:
+            self._maj_restore(f_sub, rows_f, other_f, rng)
+            self._maj_restore(l_sub, rows_l, other_l, rng)
+        # (untracked: the restore's noise draws are skipped too — every apa
+        # uses a fresh per-command generator, so later ops are unaffected)
         return act
 
     def apa_then_write(self, rf_global: int, rl_global: int,
@@ -365,12 +553,14 @@ class BankSim:
         if act.n_rf == 0:
             return act
         pattern = np.asarray(pattern, dtype=np.float32)
-        arr_f, arr_l = self._arr(f_sub), self._arr(l_sub)
+        rows_f = self._map_rows(f_sub, act.rows_f)
+        rows_l = self._map_rows(l_sub, act.rows_l)
+        arr_f, arr_l = self._cells(f_sub), self._cells(l_sub)
         _stripe, f_cols, l_cols = self._split_cols(f_sub, l_sub)
-        for r in act.rows_f:
-            arr_f[r] = pattern          # exact pattern (Obs. 1)
-        for r in act.rows_l:
-            arr_l[r, l_cols] = 1.0 - pattern[l_cols]  # negated on shared half
+        arr_f[:, rows_f] = pattern[..., self._perm]  # exact pattern (Obs. 1)
+        _lo, _f_sl, l_sl = self._col_slices(f_sub, l_sub)
+        arr_l[:, rows_l, l_sl] = \
+            (1.0 - pattern[..., l_cols])[..., None, :]  # negated shared half
         return act
 
     # ---------------- high-level op helpers (ISA entry points) ----------------
@@ -396,6 +586,16 @@ class BankSim:
     def global_addr(self, sub: int, row: int) -> int:
         return sub * self.geom.rows_per_subarray + row
 
+    def read_shared_word(self, sub: int, row: int, sl: slice) -> np.ndarray:
+        """Digital value of one shared-column half of a row, in j order —
+        the ISA's result readout ((w,), or (T, w) batched)."""
+        i = self._row(sub, row)
+        return self._out((self._cells(sub)[:, i, sl] > 0.5).astype(np.uint8))
+
     def snapshot_rows(self, sub: int, rows) -> np.ndarray:
-        arr = self._arr(sub)
-        return (arr[np.asarray(rows)] > 0.5).astype(np.uint8)
+        """(n_rows, row_bits) digital snapshot; (T, n_rows, row_bits) when
+        batched."""
+        idx = self._map_rows(sub, rows)
+        arr = self._cells(sub)
+        return self._out((arr[:, idx][..., self._invperm] > 0.5)
+                         .astype(np.uint8))

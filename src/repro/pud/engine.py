@@ -13,6 +13,14 @@ Every call is metered: the engine accumulates the DDR4 command cost the
 (read operands over the bus, compute, write back), quantifying the paper's
 motivation for each workload that routes through it
 (``OffloadReport``).
+
+The ``dram`` backend is *chunk-batched*: a bit-plane wider than one DRAM
+word is split into row-sized chunks, and each block of chunks executes as
+the trial axis of one ``BankSim(trials=C)`` episode (all chunks of a block
+run the same command sequence on the same activation pair).  The legacy
+path advanced the scrambled pair walk per chunk; to keep noisy-mode error
+statistics region-mixed, planes with >= 4 chunks are split over at least
+``DRAM_MIN_PAIR_SWEEP`` blocks, each advancing the pair cursor.
 """
 from __future__ import annotations
 
@@ -69,6 +77,11 @@ class PudEngine:
     R x 32C logical bits (one DRAM row = one plane row chunk).
     """
 
+    #: max chunks executed as one batched trial axis (bounds sim memory)
+    DRAM_CHUNK_BATCH = 32
+    #: min activation pairs swept per plane (region mixing in noisy mode)
+    DRAM_MIN_PAIR_SWEEP = 4
+
     def __init__(self, backend: str = "jnp", *, module: str | None = None,
                  noisy: bool = False, seed: int = 0):
         assert backend in BACKENDS, backend
@@ -77,11 +90,25 @@ class PudEngine:
         self.cost_model = CostModel(self.module)
         self.report = OffloadReport()
         self.noisy = noisy
+        self.seed = seed
         self._isa: PudIsa | None = None
+        self._batched_isa: dict[int, PudIsa] = {}
         if backend == "dram":
             sim = BankSim(self.module, seed=seed,
                           error_model="analog" if noisy else "ideal")
             self._isa = PudIsa(sim)
+
+    def _isa_for(self, n_chunks: int) -> PudIsa:
+        """ISA over a trial-batched BankSim with ``n_chunks`` trials
+        (cached per batch size; single-chunk work uses the scalar sim)."""
+        if n_chunks <= 1:
+            return self._isa
+        if n_chunks not in self._batched_isa:
+            sim = BankSim(self.module, seed=self.seed,
+                          error_model="analog" if self.noisy else "ideal",
+                          trials=n_chunks, track_unshared=False)
+            self._batched_isa[n_chunks] = PudIsa(sim)
+        return self._batched_isa[n_chunks]
 
     # ------------- accounting -------------
     def _meter(self, op: str, n_inputs: int, n_bits: int) -> None:
@@ -140,38 +167,59 @@ class PudEngine:
         return kops.ref.bitcount_planes(planes)
 
     # ------------- DRAM backend plumbing -------------
-    def _dram_chunks(self, bits: np.ndarray):
-        w = self._isa.width
+    def _block_size(self, n_chunks: int) -> int:
+        """Chunks per batched episode: capped by DRAM_CHUNK_BATCH, and
+        small enough that a plane sweeps >= DRAM_MIN_PAIR_SWEEP activation
+        pairs (one per block) when it has that many chunks."""
+        target = max(1, -(-n_chunks // self.DRAM_MIN_PAIR_SWEEP))
+        return min(self.DRAM_CHUNK_BATCH, target)
+
+    @staticmethod
+    def _to_chunks(bits: np.ndarray, w: int) -> np.ndarray:
+        """(..., B) bit vector -> (..., C, w) zero-padded row chunks."""
         n_bits = bits.shape[-1]
-        for off in range(0, n_bits, w):
-            yield off, bits[..., off:off + w]
+        n_chunks = -(-n_bits // w)
+        pad = n_chunks * w - n_bits
+        if pad:
+            bits = np.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+        return bits.reshape(bits.shape[:-1] + (n_chunks, w))
 
     def _dram_nary(self, planes: jax.Array, op: str) -> jax.Array:
         pl = np.asarray(planes)
         n, r, c = pl.shape
         bits = np.asarray(kops.ref.unpack_bits(jnp.asarray(pl))).reshape(
             n, r * c * 32)
-        out = np.zeros(r * c * 32, dtype=np.uint8)
         w = self._isa.width
-        for off, chunk in self._dram_chunks(bits):
-            ops_in = [np.pad(chunk[i], (0, w - chunk.shape[-1]))
-                      if chunk.shape[-1] < w else chunk[i] for i in range(n)]
-            res = self._isa.nary_op(op, ops_in)
-            out[off:off + chunk.shape[-1]] = res[:chunk.shape[-1]]
-        packed = kops.ref.pack_bits(jnp.asarray(out.reshape(r, c * 32)))
-        return packed
+        chunks = self._to_chunks(bits, w)            # (n, C, w)
+        blk_sz = self._block_size(chunks.shape[1])
+        pieces = []
+        for lo in range(0, chunks.shape[1], blk_sz):
+            blk = chunks[:, lo:lo + blk_sz]          # (n, C', w)
+            isa = self._isa_for(blk.shape[1])
+            if blk.shape[1] == 1:
+                res = isa.nary_op(op, list(blk[:, 0]))[None]
+            else:
+                res = isa.nary_op(op, blk)           # (C', w)
+            pieces.append(res)
+        out = np.concatenate(pieces, axis=0).reshape(-1)[:r * c * 32]
+        return kops.ref.pack_bits(jnp.asarray(out.reshape(r, c * 32)))
 
     def _dram_not(self, plane: jax.Array) -> jax.Array:
         pl = np.asarray(plane)
         r, c = pl.shape
         bits = np.asarray(kops.ref.unpack_bits(jnp.asarray(pl))).reshape(
             r * c * 32)
-        out = np.zeros_like(bits)
         w = self._isa.width
-        for off in range(0, bits.size, w):
-            chunk = bits[off:off + w]
-            src = np.pad(chunk, (0, w - chunk.size)) if chunk.size < w \
-                else chunk
-            res = self._isa.op_not(src)
-            out[off:off + chunk.size] = res[:chunk.size]
+        chunks = self._to_chunks(bits, w)            # (C, w)
+        blk_sz = self._block_size(chunks.shape[0])
+        pieces = []
+        for lo in range(0, chunks.shape[0], blk_sz):
+            blk = chunks[lo:lo + blk_sz]
+            isa = self._isa_for(blk.shape[0])
+            if blk.shape[0] == 1:
+                res = isa.op_not(blk[0])[None]
+            else:
+                res = isa.op_not(blk)                # (C', w)
+            pieces.append(res)
+        out = np.concatenate(pieces, axis=0).reshape(-1)[:r * c * 32]
         return kops.ref.pack_bits(jnp.asarray(out.reshape(r, c * 32)))

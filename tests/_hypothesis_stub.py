@@ -1,0 +1,143 @@
+"""Minimal in-repo fallback for ``hypothesis`` (property-based testing).
+
+The real hypothesis is a test dependency (``pip install -e .[test]``) and is
+what CI runs.  Environments without it (e.g. hermetic containers) would fail
+at *collection* time for the four property-test modules; this stub keeps
+them collectable and runs each ``@given`` test over a deterministic sample
+of pseudo-random examples instead — a smoke-level approximation of the real
+search, with none of the shrinking/database machinery.
+
+Only the API surface these tests use is implemented: ``given``,
+``settings``, and ``strategies.{integers, booleans, sampled_from, lists,
+composite}``.  Draws are seeded per test so runs are reproducible.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    # combinators used rarely; add as needed
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred, max_tries: int = 100):
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(draw)
+
+
+class strategies:  # noqa: N801 - mirrors `hypothesis.strategies` module name
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size=0, max_size=10,
+              unique=False) -> _Strategy:
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            if not unique:
+                return [elements.example(rng) for _ in range(size)]
+            out, seen = [], set()
+            tries = 0
+            while len(out) < size and tries < 50 * (size + 1):
+                v = elements.example(rng)
+                tries += 1
+                if v not in seen:
+                    seen.add(v)
+                    out.append(v)
+            return out
+        return _Strategy(draw)
+
+    @staticmethod
+    def composite(fn):
+        """`@st.composite` — fn(draw, ...) -> value becomes a strategy
+        factory."""
+        @functools.wraps(fn)
+        def factory(*args, **kwargs):
+            def draw_value(rng):
+                def draw(strategy: _Strategy):
+                    return strategy.example(rng)
+                return fn(draw, *args, **kwargs)
+            return _Strategy(draw_value)
+        return factory
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    all = staticmethod(lambda: [])
+
+
+def settings(max_examples: int | None = None, deadline=None, **_kw):
+    """Decorator recording the example budget for a later @given."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    if arg_strategies:
+        raise NotImplementedError(
+            "the hypothesis stub supports keyword strategies only "
+            "(@given(x=st...)); install the real hypothesis for positional")
+
+    def deco(fn):
+        inner = fn
+        max_examples = getattr(fn, "_stub_max_examples", None) \
+            or _DEFAULT_EXAMPLES
+
+        @functools.wraps(inner)
+        def runner(*fixture_args, **fixture_kwargs):
+            seed = abs(hash(inner.__qualname__)) % (2 ** 31)
+            rng = np.random.default_rng(seed)
+            budget = min(max_examples, _DEFAULT_EXAMPLES * 4)
+            for _ in itertools.repeat(None, budget):
+                kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                inner(*fixture_args, **fixture_kwargs, **kwargs)
+
+        # hide the strategy-filled params from pytest's fixture resolution
+        sig = inspect.signature(inner)
+        runner.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in kw_strategies])
+        runner.hypothesis_stub = True
+        return runner
+    return deco

@@ -1,0 +1,218 @@
+"""Trial-batched Monte-Carlo: parity with the per-trial path + paper values.
+
+The batched path must (a) agree statistically with the seed per-trial loop
+at the same seed and trial count, (b) agree with the closed-form calibrated
+model, (c) reproduce the paper's headline numbers within the calibration
+deltas, and (d) keep the jax closed-form twin within 1e-6 of the numpy
+oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.core import analog as A
+from repro.core import analog_jax as AJ
+from repro.core import calibrate as C
+from repro.core import charz
+from repro.core.isa import PudIsa
+from repro.core.simulator import BankSim
+
+
+# ---------------------------------------------------------------------------
+# batched vs per-trial parity (same seed, same trial count)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("op,n", [("and", 2), ("or", 4)])
+def test_batched_matches_per_trial_boolean(op, n):
+    kw = dict(trials=216, row_bits=2048, seed=3)
+    pt = charz.mc_boolean_success(op, n, batched=False, **kw)
+    bt = charz.mc_boolean_success(op, n, batched=True, **kw)
+    # both estimate the same region-averaged success; 2.5 pts covers the
+    # pair-sampling + trial-noise variance at 216 trials comfortably (>2σ)
+    assert abs(pt - bt) < 0.025, (pt, bt)
+
+
+def test_batched_matches_per_trial_not():
+    kw = dict(trials=216, row_bits=2048, seed=4)
+    pt = charz.mc_not_success(1, batched=False, **kw)
+    bt = charz.mc_not_success(1, batched=True, **kw)
+    assert abs(pt - bt) < 0.02, (pt, bt)
+
+
+def test_batched_matches_closed_form():
+    """Batched MC converges to the calibrated model (region-averaged,
+    like-for-like module: the default 4Gb M-die)."""
+    for op, n in (("and", 2), ("or", 4), ("and", 16)):
+        got = 100.0 * charz.mc_boolean_success(op, n, trials=432,
+                                               row_bits=2048, seed=1)
+        want = C._avg(op, n, A.DEFAULT_PARAMS, die_rev="M", density_gb=4)
+        assert abs(got - want) < 3.0, (op, n, got, want)
+
+
+def test_cell_map_batched_matches_per_trial():
+    kw = dict(trials=300, row_bits=2048, seed=9)
+    m_pt = charz.measure_cell_map("and", 2, batched=False, **kw)
+    m_bt = charz.measure_cell_map("and", 2, batched=True, **kw)
+    assert abs(m_pt.mean() - m_bt.mean()) < 0.02
+    # same physical cells (same static offsets): per-cell maps correlate
+    # (attenuated by per-map trial noise: ~0.9^2 of the true correlation)
+    corr = np.corrcoef(m_pt, m_bt)[0, 1]
+    assert corr > 0.7, corr
+    # bimodality preserved (Obs. 3 / wide Fig. 15 box plots)
+    assert np.std(m_bt) > 0.05
+    assert np.sum(m_bt <= 0.6) > 0.02 * m_bt.size
+
+
+# ---------------------------------------------------------------------------
+# paper values through the batched MC (fig7 / fig15)
+# ---------------------------------------------------------------------------
+def test_fig7_not_paper_value_batched(mc_trials):
+    d = charz.fig7_not_vs_dst_rows(mc=True, trials=mc_trials(270),
+                                   batched=True)
+    got = d[1]["monte_carlo"]
+    assert abs(got - d["paper"][1]) < 0.05, (got, d["paper"][1])
+    # Obs. 4: success collapses with destination-row count
+    assert d[32]["monte_carlo"] < 0.35
+
+
+def test_fig15_paper_values_batched(mc_trials):
+    d = charz.fig15_ops_vs_inputs(mc=True, trials=mc_trials(270),
+                                  batched=True)
+    for op in ("and", "nand", "or", "nor"):
+        got = d[op][16]["monte_carlo"]
+        paper = d["paper_16"][op]
+        assert abs(got - paper) < 0.04, (op, got, paper)
+        # Obs. 11: success increases with fan-in
+        assert d[op][16]["monte_carlo"] > d[op][2]["monte_carlo"]
+
+
+# ---------------------------------------------------------------------------
+# jax closed-form twin + vectorized grids
+# ---------------------------------------------------------------------------
+def test_jax_closed_form_matches_numpy():
+    worst = 0.0
+    for op in ("and", "nand", "or", "nor"):
+        for n in (2, 4, 8, 16):
+            a = A.boolean_success_avg(op, n)
+            j = AJ.boolean_success_avg(op, n)
+            worst = max(worst, abs(a - j))
+    assert worst < 1e-6, worst
+
+
+def test_region_grid_matches_scalar_loop():
+    g = A.boolean_success_avg_grid("and", 4)
+    loop = np.array([[A.boolean_success_avg("and", 4, compute_region=rc,
+                                            ref_region=rr)
+                      for rr in (0, 1, 2)] for rc in (0, 1, 2)])
+    assert np.max(np.abs(g - loop)) < 1e-12
+    gn = A.not_success_grid(4)
+    loopn = np.array([[A.not_success(4, src_region=rs, dst_region=rd)
+                       for rd in (0, 1, 2)] for rs in (0, 1, 2)])
+    assert np.max(np.abs(gn - loopn)) < 1e-12
+
+
+def test_model_sampler_matches_closed_form():
+    closed = A.boolean_success_avg("and", 4)
+    sampled = AJ.sample_boolean_success("and", 4, trials=4000, width=512,
+                                        seed=0)
+    assert abs(sampled - closed) < 0.01, (sampled, closed)
+
+
+# ---------------------------------------------------------------------------
+# batched simulator/ISA mechanics
+# ---------------------------------------------------------------------------
+def test_batched_ideal_truth_tables():
+    sim = BankSim(row_bits=256, error_model="ideal", seed=1, trials=7)
+    isa = PudIsa(sim)
+    rng = np.random.default_rng(0)
+    ops = rng.integers(0, 2, (4, 7, isa.width)).astype(np.uint8)
+    got = isa.nary_op("and", ops)
+    assert got.shape == (7, isa.width)
+    assert np.array_equal(got, np.bitwise_and.reduce(ops))
+    got = isa.nary_op("nor", list(ops))
+    assert np.array_equal(got, 1 - np.bitwise_or.reduce(ops))
+    bits = rng.integers(0, 2, (7, isa.width)).astype(np.uint8)
+    assert np.array_equal(isa.op_not(bits), 1 - bits)
+
+
+def test_batched_rows_roundtrip_and_shapes():
+    sim = BankSim(row_bits=128, error_model="ideal", trials=5)
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, (5, 128)).astype(np.uint8)
+    sim.write_row(1, 3, bits)
+    out = sim.read_row(1, 3)
+    assert out.shape == (5, 128)
+    assert np.array_equal(out, bits)
+    # (w,) broadcast write
+    one = rng.integers(0, 2, 128).astype(np.uint8)
+    sim.write_row(1, 4, one)
+    assert np.array_equal(sim.read_row(1, 4), np.broadcast_to(one, (5, 128)))
+    sim.rowclone(1, 3, 9)
+    assert np.array_equal(sim.read_row(1, 9), bits)
+    snap = sim.snapshot_rows(1, [3, 4, 9])
+    assert snap.shape == (5, 3, 128)
+
+
+def test_batched_trials_validation():
+    with pytest.raises(ValueError):
+        BankSim(trials=0)
+
+
+def test_recycle_rows_preserves_results():
+    """Recycling slots between ops must not change op outputs (every op
+    re-stages the rows it reads)."""
+    rng = np.random.default_rng(2)
+    outs = []
+    for recycle in (False, True):
+        sim = BankSim(row_bits=512, seed=11, trials=6, error_model="analog",
+                      track_unshared=False)
+        isa = PudIsa(sim)
+        rng_l = np.random.default_rng(5)
+        got = []
+        for k in range(3):
+            if recycle:
+                sim.recycle_rows()
+            ops = rng_l.integers(0, 2, (2, 6, isa.width)).astype(np.uint8)
+            got.append(isa.nary_op("and", list(ops), pair_index=k))
+        outs.append(np.concatenate(got))
+    assert np.array_equal(outs[0], outs[1])
+
+
+def test_sequential_module_not_mc():
+    """Samsung (sequential activation): ~2/3 of listed pairs miss — the
+    pair sweep must skip them instead of crashing (both MC paths)."""
+    for batched in (True, False):
+        s = charz.mc_not_success(1, trials=18, module="samsung_8gb_d_2133",
+                                 batched=batched)
+        assert 0.5 < s <= 1.0, (batched, s)
+
+
+def test_engine_dram_chunk_batched_ideal():
+    import jax.numpy as jnp
+    from repro.pud.engine import PudEngine
+    rng = np.random.default_rng(0)
+    # 19200 bits -> 5 row chunks on the default module -> batched trial axis
+    p = jnp.asarray(rng.integers(0, 2 ** 32, (3, 2, 300), dtype=np.uint32))
+    eng = PudEngine("dram", noisy=False)
+    ref = PudEngine("jnp")
+    for op in ("and", "or", "nand", "nor"):
+        assert (np.asarray(eng.nary(p, op))
+                == np.asarray(ref.nary(p, op))).all(), op
+    assert (np.asarray(eng.not_(p[0])) == np.asarray(ref.not_(p[0]))).all()
+
+
+# ---------------------------------------------------------------------------
+# large-trial (paper-scale) checks — slow lane
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_large_trial_batched_close_to_closed_form():
+    got = 100.0 * charz.mc_boolean_success("and", 16, trials=1800,
+                                           row_bits=4096, seed=2)
+    want = C._avg("and", 16, A.DEFAULT_PARAMS, die_rev="M", density_gb=4)
+    assert abs(got - want) < 1.5, (got, want)
+
+
+@pytest.mark.slow
+def test_large_trial_model_sampler_10k():
+    closed = A.boolean_success_avg("nand", 16)
+    sampled = AJ.sample_boolean_success("nand", 16, trials=10_000,
+                                        width=1024, seed=1)
+    assert abs(sampled - closed) < 0.005, (sampled, closed)
