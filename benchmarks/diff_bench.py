@@ -1,0 +1,100 @@
+"""Diff success-rate keys between two BENCH_*.json snapshots.
+
+Guards the nightly characterization lane: the fresh snapshot's Monte-Carlo
+success rates (raw-op *and* program-level) must not regress by more than
+``--tol`` percentage points against the committed per-PR baseline.  Pure
+timing keys are reported but never fail the diff (CI hosts vary); success
+rates are physics — they only move if the model or the executor changed.
+
+Usage:
+    python -m benchmarks.diff_bench NEW.json [BASELINE.json] [--tol 2.0]
+
+With no explicit baseline, the newest committed ``BENCH_pr*.json`` (by PR
+number) in the repository root is used.  Exit status 1 on regression.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import re
+import sys
+
+
+def _success_keys(snap: dict) -> dict[str, float]:
+    """Flat {metric: success-rate in [0,1]} view of one snapshot."""
+    out: dict[str, float] = {}
+    for section, prefix in (("charz_speedup_detail", "op"),
+                            ("program_speedup_detail", "program")):
+        for name, d in snap.get(section, {}).items():
+            for kind in ("per_trial_success", "batched_success"):
+                if kind in d:
+                    out[f"{prefix}.{name}.{kind}"] = float(d[kind])
+    return out
+
+
+def _baseline_path() -> str:
+    cands = glob.glob("BENCH_pr*.json")
+    if not cands:
+        raise SystemExit("no committed BENCH_pr*.json baseline found")
+
+    def prnum(p: str) -> int:
+        m = re.search(r"pr(\d+)", p)
+        return int(m.group(1)) if m else -1
+
+    return max(cands, key=prnum)
+
+
+def diff(new: dict, base: dict, tol_pts: float) -> list[str]:
+    """Regression messages (empty = pass)."""
+    nk, bk = _success_keys(new), _success_keys(base)
+    msgs = []
+    for key in sorted(set(nk) & set(bk)):
+        delta = 100.0 * (nk[key] - bk[key])
+        status = "REGRESSION" if delta < -tol_pts else "ok"
+        print(f"{status:>10}  {key}: {100 * bk[key]:.2f}% -> "
+              f"{100 * nk[key]:.2f}% ({delta:+.2f} pts)")
+        if delta < -tol_pts:
+            msgs.append(f"{key} regressed {delta:+.2f} pts "
+                        f"(tolerance {tol_pts})")
+    only_new = sorted(set(nk) - set(bk))
+    if only_new:
+        print(f"new metrics (no baseline): {', '.join(only_new)}")
+    missing = sorted(set(bk) - set(nk))
+    if missing:
+        # a silently-vanished metric must not read as "no regression"
+        msgs.append("baseline metrics missing from the new snapshot: "
+                    + ", ".join(missing))
+    if not set(nk) & set(bk):
+        msgs.append("no overlapping success-rate keys between snapshots")
+    return msgs
+
+
+def main(argv: list[str]) -> int:
+    tol = 2.0
+    if "--tol" in argv:
+        i = argv.index("--tol")
+        tol = float(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    args = [a for a in argv if not a.startswith("--")]
+    if not args:
+        raise SystemExit(__doc__)
+    new_path = args[0]
+    base_path = args[1] if len(args) > 1 else _baseline_path()
+    with open(new_path) as f:
+        new = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+    print(f"# diffing {new_path} against baseline {base_path} "
+          f"(tolerance {tol} pts)")
+    msgs = diff(new, base, tol)
+    if msgs:
+        print("\nFAIL:")
+        for m in msgs:
+            print(f"  {m}")
+        return 1
+    print("\nPASS: no success-rate regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -5,6 +5,8 @@ Prints CSV sections:
     scorecard; closed-form calibrated model + Monte-Carlo spot checks),
   * trial-batched vs per-trial Monte-Carlo characterization speedup
     (the PR-over-PR perf trajectory headline),
+  * program-level Monte-Carlo (XOR / MAJ3 / ripple adder through the
+    unified trial-batched executor) per-trial vs batched,
   * in-DRAM vs CPU cost model (the paper's motivation, Table-style),
   * kernel micro-benchmarks (packed-op throughput on this host),
   * PuD-engine offload accounting on LM workloads.
@@ -12,7 +14,8 @@ Prints CSV sections:
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]
 
 ``--json`` additionally writes machine-readable timings + success-rate
-deltas (default path BENCH_pr1.json) so CI can archive the trajectory.
+deltas (default path BENCH_pr2.json) so CI can archive the trajectory;
+``benchmarks.diff_bench`` compares snapshots across PRs/nightlies.
 """
 from __future__ import annotations
 
@@ -218,6 +221,59 @@ def charz_batched_speedup(fast=False):
     return speedup
 
 
+def program_mc_speedup(fast=False):
+    """Program-level Monte-Carlo through the unified executor: whole
+    compiled Boolean programs (XOR / MAJ3 / 4-bit ripple adder) on the
+    noisy simulator, per-trial reference vs trial-batched ``run_sim`` at
+    equal trial counts (acceptance target: >= 5x)."""
+    from repro.core import charz
+
+    cfgs = [
+        ("xor", 216 if fast else 432),
+        ("maj3", 216 if fast else 432),
+        ("add4", 54 if fast else 108),
+    ]
+    # warm pair-inventory/caches at the benchmark seed
+    charz.mc_program_success("xor", trials=9, row_bits=2048, seed=0)
+    rows = []
+    tot_pt = tot_b = 0.0
+    detail = {}
+    for name, trials in cfgs:
+        prog = charz.get_program(name)
+        n_ops = sum(1 for i in prog.instrs
+                    if i.op not in ("input", "const"))
+        t0 = time.perf_counter()
+        v_pt = float(charz.mc_program_success(name, trials=trials,
+                                              batched=False))
+        t_pt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        v_b = float(charz.mc_program_success(name, trials=trials))
+        t_b = time.perf_counter() - t0
+        est = float(charz.program_success_estimate(name))
+        tot_pt += t_pt
+        tot_b += t_b
+        rows.append((name, n_ops, trials, round(t_pt, 3), round(t_b, 3),
+                     round(t_pt / t_b, 1), round(100 * v_pt, 2),
+                     round(100 * v_b, 2), round(100 * est, 2)))
+        detail[name] = {"native_ops": n_ops, "trials": trials,
+                        "per_trial_s": t_pt, "batched_s": t_b,
+                        "speedup": t_pt / t_b,
+                        "per_trial_success": v_pt, "batched_success": v_b,
+                        "independent_op_estimate": est}
+    speedup = tot_pt / tot_b
+    rows.append(("TOTAL", "", "", round(tot_pt, 3), round(tot_b, 3),
+                 round(speedup, 1), "", "", ""))
+    _csv("Program execution MC: per-trial vs trial-batched (equal trials)",
+         rows,
+         "program,native_ops,trials,per_trial_s,batched_s,speedup,"
+         "per_trial_succ,batched_succ,indep_op_est")
+    _p(f"program execution batched speedup: {speedup:.1f}x "
+       f"(target >= 5x)")
+    RESULTS["program_speedup"] = speedup
+    RESULTS["program_speedup_detail"] = detail
+    return speedup
+
+
 def calibration_scorecard():
     from repro.core import analog as A
     from repro.core import calibrate as C
@@ -317,7 +373,7 @@ def _json_path(argv) -> str | None:
     i = argv.index("--json")
     if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
         return argv[i + 1]
-    return "BENCH_pr1.json"
+    return "BENCH_pr2.json"
 
 
 def main() -> None:
@@ -336,6 +392,7 @@ def main() -> None:
     fig16_kdep()
     fig17_21_op_modifiers()
     charz_batched_speedup(fast=fast)
+    program_mc_speedup(fast=fast)
     calibration_scorecard()
     cost_model_table()
     reliability_planning()

@@ -1,8 +1,10 @@
 """Reproduce the paper's characterization campaign on the simulator.
 
 Runs the Monte-Carlo twin of the paper's DRAM Bender methodology for a
-subset of figures and prints model-vs-paper tables.  (The closed-form
-variants of every figure run in benchmarks/run.py.)
+subset of figures and prints model-vs-paper tables, plus the program-level
+success-rate table (XOR / MAJ3 / 4-bit adder through the trial-batched
+program executor).  (The closed-form variants of every figure run in
+benchmarks/run.py.)
 
 Run: PYTHONPATH=src python examples/characterize.py
 """
@@ -22,6 +24,15 @@ for op in ("and", "nand", "or", "nor"):
     print(f"  {op.upper():4s}: closed {100 * c['closed_form']:6.2f}%  "
           f"MC {100 * c['monte_carlo']:6.2f}%  "
           f"paper {100 * d['paper_16'][op]:.2f}%")
+
+print("\nProgram-level success (trial-batched executor, 108 trials)")
+print("  program  native_ops  MC_success  indep_op_est")
+for name in ("xor", "maj3", "add4"):
+    prog = charz.get_program(name)
+    n_ops = sum(1 for i in prog.instrs if i.op not in ("input", "const"))
+    p = charz.mc_program_success(name, trials=108, row_bits=1024)
+    est = charz.program_success_estimate(name)
+    print(f"  {name:7s} {n_ops:10d} {100 * p:10.2f}% {100 * est:11.2f}%")
 
 print("\nObs 3 - per-cell NOT success map (perfect cells exist)")
 m = charz.measure_cell_map_not(trials=120, row_bits=1024)

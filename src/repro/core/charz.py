@@ -19,12 +19,21 @@ legacy per-trial scrambled-pair walk (``batched=False``, kept as the
 reference implementation and for parity tests).  For quick sweeps at
 closed-form fidelity there are also one-call jax samplers
 (``model_boolean_success`` / ``model_not_success``).
+Program-level characterization (``mc_program_success``) measures the same
+statistic one level up: whole compiled Boolean programs (XOR-from-NANDs,
+MAJ3, ripple-carry adders) execute on the noisy simulator through the
+trial-batched program executor (``compiler.run_sim``), reproducing the
+composed-operation reliability methodology of the follow-on PuD works
+(PULSAR, Simultaneous Many-Row Activation).
 """
 from __future__ import annotations
+
+from functools import lru_cache
 
 import numpy as np
 
 from . import analog as A
+from . import compiler as CC
 from . import decoder as DEC
 from .analog import CLOSE, FAR, MIDDLE
 from .device import MODULE_ZOO, get_module
@@ -253,6 +262,92 @@ def measure_cell_map_not(*, trials: int = 200, row_bits: int = 2048,
         got = isa.op_not(bits, n_dst=1, pair_index=0)
         hits += (got == 1 - bits)
     return hits / trials
+
+
+# ---------------------------------------------------------------------------
+# Program-level Monte-Carlo (composed operations through the executor)
+# ---------------------------------------------------------------------------
+#: headline compiled programs for program-level characterization
+PROGRAMS = ("xor", "maj3", "add4")
+
+
+@lru_cache(maxsize=16)
+def get_program(name: str) -> CC.Program:
+    """Compile one of the named characterization programs."""
+    if name == "xor":
+        return CC.compile_expr(CC.Xor(CC.Var("a"), CC.Var("b")))
+    if name == "maj3":
+        return CC.compile_expr(CC.Maj(CC.Var("a"), CC.Var("b"), CC.Var("c")))
+    if name.startswith("add"):
+        return CC.compile_expr(CC.adder_exprs(int(name[3:])))
+    raise ValueError(f"unknown program {name!r} (want one of {PROGRAMS})")
+
+
+def program_success_estimate(name: str, module: str | None = None,
+                             **kw) -> float:
+    """Independent-op estimate: product of per-instruction closed-form
+    success rates on the given module.  A lower bound in spirit — real
+    programs do better because an op error only corrupts an output bit if
+    it happens to propagate to it."""
+    m = get_module(module) if module else get_module()
+    kw = {"mfr": m.manufacturer.value, "density_gb": m.density_gb,
+          "die_rev": m.die_rev, "speed_mts": m.speed_mts} | kw
+    p = 1.0
+    for i in get_program(name).instrs:
+        if i.op == "not":
+            p *= A.not_success(1, **kw)
+        elif i.op in ("and", "or", "nand", "nor"):
+            p *= A.boolean_success_avg(i.op, max(len(i.srcs), 2), **kw)
+    return p
+
+
+def mc_program_success(program: str | CC.Program, *, trials: int = 200,
+                       row_bits: int = 2048, seed: int = 0,
+                       module: str | None = None, temp_c: float = 50.0,
+                       batched: bool = True,
+                       groups: int = MC_PAIR_GROUPS) -> float:
+    """Bit-averaged MC success of a whole compiled program on the noisy
+    simulator: every output bit of every trial is compared against
+    ``compiler.run_ideal`` on the same random inputs.
+
+    ``batched=True`` (default) splits the trials over ``groups``
+    trial-batched ``compiler.run_sim`` episodes (``BankSim(trials=T/G)``);
+    the ISA's scrambled pair walk advances across groups, so — like the
+    raw-op MC — the estimate region-mixes its activation pairs instead of
+    pinning each instruction to one pair for every trial.
+    ``batched=False`` is the per-trial reference: one full program
+    execution per trial on a scalar sim (same statistic; the walk then
+    advances every instruction of every trial).
+    """
+    prog = get_program(program) if isinstance(program, str) else program
+    names = sorted({i.name for i in prog.instrs if i.op == "input"})
+    rng = np.random.default_rng(seed + 1)
+    ok = 0
+    tot = 0
+    if batched:
+        groups = max(1, min(groups, trials))
+        tg = max(1, -(-trials // groups))
+        sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
+                      temp_c=temp_c, error_model="analog", trials=tg,
+                      track_unshared=False)
+        isa = PudIsa(sim)
+        for _g in range(groups):
+            ins = {n: _random_bits(rng, (tg, isa.width)) for n in names}
+            got = CC.run_sim(prog, ins, isa, trials=tg)
+            want = CC.run_ideal(prog, ins, width=isa.width)
+            ok += sum(int(np.sum(got[k] == want[k])) for k in prog.outputs)
+            tot += sum(got[k].size for k in prog.outputs)
+        return ok / tot
+    sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
+                  temp_c=temp_c, error_model="analog")
+    isa = PudIsa(sim)
+    for _t in range(trials):
+        ins = {n: _random_bits(rng, (isa.width,)) for n in names}
+        got = CC.run_sim(prog, ins, isa)
+        want = CC.run_ideal(prog, ins, width=isa.width)
+        ok += sum(int(np.sum(got[k] == want[k])) for k in prog.outputs)
+        tot += sum(got[k].size for k in prog.outputs)
+    return ok / tot
 
 
 # ---------------------------------------------------------------------------

@@ -19,8 +19,13 @@ Programs are SSA: each instruction writes a fresh virtual register.  Three
 executors share the IR:
   * :func:`run_ideal`  — exact numpy semantics (the oracle),
   * :func:`run_sim`    — on a :class:`~repro.core.isa.PudIsa` (noisy,
-    command-accurate),
-  * ``repro.pud.engine`` — the TPU bit-plane twin (packed-uint32 Pallas).
+    command-accurate); **trial-batched** on a ``BankSim(trials=T)`` ISA,
+    where registers are ``(T, width)`` planes and every instruction is one
+    vectorized Monte-Carlo episode (``batched=False`` keeps the per-trial
+    loop as the reference implementation),
+  * ``repro.pud.engine.PudEngine.run_program`` — packed bit-plane
+    execution on the jnp / Pallas / chunk-batched-DRAM backends with
+    per-instruction offload metering.
 """
 from __future__ import annotations
 
@@ -217,9 +222,13 @@ def compile_expr(outputs: dict[str, Expr] | Expr) -> Program:
 # ---------------------------------------------------------------------------
 def run_ideal(prog: Program, inputs: dict[str, np.ndarray],
               width: int | None = None) -> dict[str, np.ndarray]:
-    """Exact numpy reference semantics."""
+    """Exact numpy reference semantics.
+
+    Inputs may carry a leading trial axis ``(T, width)`` — pass ``width``
+    explicitly then; consts broadcast and outputs keep the trial axis.
+    """
     if width is None:
-        width = len(next(iter(inputs.values())))
+        width = np.asarray(next(iter(inputs.values()))).shape[-1]
     regs: dict[int, np.ndarray] = {}
     for i in prog.instrs:
         if i.op == "input":
@@ -243,26 +252,82 @@ def run_ideal(prog: Program, inputs: dict[str, np.ndarray],
     return {k: regs[r] for k, r in prog.outputs.items()}
 
 
-def run_sim(prog: Program, inputs: dict[str, np.ndarray],
-            isa: PudIsa) -> dict[str, np.ndarray]:
-    """Execute on the (noisy) DRAM simulator through the ISA."""
+def _run_sim_once(prog: Program, inputs: dict[str, np.ndarray],
+                  isa: PudIsa, *, recycle: bool) -> dict[str, np.ndarray]:
+    """One pass of ``prog`` through the ISA (scalar or trial-batched sim)."""
     width = isa.width
+    t = isa.trials
+    want = ((width,),) if t is None else ((width,), (t, width))
     regs: dict[int, np.ndarray] = {}
     for i in prog.instrs:
         if i.op == "input":
             v = np.asarray(inputs[i.name], dtype=np.uint8)
-            if v.shape != (width,):
-                raise ValueError(f"input {i.name}: want width {width}")
+            if v.shape not in want:
+                raise ValueError(
+                    f"input {i.name}: want shape in {want}, got {v.shape}")
             regs[i.dst] = v
         elif i.op == "const":
             regs[i.dst] = np.full(width, int(i.value), dtype=np.uint8)
         elif i.op == "not":
+            if recycle:
+                isa.sim.recycle_rows()
             regs[i.dst] = isa.op_not(regs[i.srcs[0]])
         elif i.op in ("and", "or", "nand", "nor"):
+            if recycle:
+                isa.sim.recycle_rows()
             regs[i.dst] = isa.nary_op(i.op, [regs[s] for s in i.srcs])
         else:
             raise ValueError(i.op)
     return {k: regs[r] for k, r in prog.outputs.items()}
+
+
+def run_sim(prog: Program, inputs: dict[str, np.ndarray], isa: PudIsa, *,
+            trials: int | None = None, batched: bool = True,
+            recycle: bool | None = None) -> dict[str, np.ndarray]:
+    """Execute on the (noisy) DRAM simulator through the ISA.
+
+    Trial batching: on a ``PudIsa`` over ``BankSim(trials=T)`` the whole
+    program executes once with ``(T, width)`` register planes — every
+    instruction is one vectorized episode across the T Monte-Carlo trials.
+    Inputs may be ``(width,)`` (broadcast across trials) or ``(T, width)``
+    (per-trial planes); outputs are ``(T, width)``.  On a scalar-sim ISA
+    the legacy ``(width,)`` semantics are unchanged.
+
+    ``trials``  — optional sanity pin: with ``batched=True`` it must equal
+    the sim's trial count; with ``batched=False`` it is the number of
+    sequential repetitions of the reference path (below).
+
+    ``batched=False`` — the per-trial *reference* implementation: the
+    program runs ``trials`` times in a Python loop on a scalar-sim ISA
+    (inputs ``(T, width)`` are sliced per repetition, ``(width,)`` reused),
+    outputs stacked to ``(T, width)``.  Kept for parity tests and as the
+    honest baseline of the program-level MC benchmark.
+
+    ``recycle`` — forget sim row-slot assignments before each op (safe:
+    ops re-stage every row they read) so the hot working set stays one
+    op's rows instead of growing with the program; defaults to True on
+    trial-batched sims, False on scalar sims (seed-compatible behavior).
+    """
+    t_sim = isa.trials
+    if recycle is None:
+        recycle = t_sim is not None
+    if batched:
+        if trials is not None and trials != (1 if t_sim is None else t_sim):
+            raise ValueError(
+                f"trials={trials} but the ISA's sim runs "
+                f"{t_sim or 1} trials; build BankSim(trials={trials})")
+        return _run_sim_once(prog, inputs, isa, recycle=recycle)
+    if t_sim is not None:
+        raise ValueError("batched=False needs a scalar-sim PudIsa "
+                         "(the per-trial reference path)")
+    if trials is None:
+        return _run_sim_once(prog, inputs, isa, recycle=recycle)
+    outs = []
+    for t in range(trials):
+        ins_t = {k: (v[t] if np.asarray(v).ndim == 2 else v)
+                 for k, v in inputs.items()}
+        outs.append(_run_sim_once(prog, ins_t, isa, recycle=recycle))
+    return {k: np.stack([o[k] for o in outs]) for k in prog.outputs}
 
 
 # ---------------------------------------------------------------------------

@@ -239,6 +239,11 @@ class PudIsa:
     def width(self) -> int:
         return self.sim.shared_w
 
+    @property
+    def trials(self) -> int | None:
+        """Trial-batch size of the underlying sim (None = scalar API)."""
+        return self.sim.trials
+
     def _pack(self, bits: np.ndarray, side: str) -> np.ndarray:
         """Word -> full row.  ``bits`` is (w,) or, on a batched sim, (T, w);
         the packed row keeps any leading trial axis."""

@@ -41,6 +41,36 @@ model process variation of one physical chip); per-trial noise, floor flips
 and coins are drawn ``(T, w)`` at once.  With ``trials=None`` (default) the
 simulator runs a single trial and keeps the seed-compatible scalar API:
 identical RNG consumption, identical results, rows returned as 1-D arrays.
+
+Seed roles
+----------
+``seed`` is the *chip identity*: it fixes the row-decoder hash (which
+address pairs activate) and the static per-SA offset latents.  Per-trial
+noise draws come from an independent stream keyed by ``noise_seed``
+(default: ``seed``).  Callers that split one workload over several
+command-sequence episodes on the *same* chip (e.g. the chunk-blocked
+``repro.pud.engine`` dram backend) derive a fresh ``noise_seed`` per
+episode via :meth:`reseed_noise`, so error patterns never repeat across
+blocks while the chip's decoder map and static offsets stay put.
+
+Resolve backends
+----------------
+The sense-amp comparator of the Boolean-op protocol (``_resolve``) is
+pluggable via ``resolve_backend``:
+
+* ``"numpy"`` — the in-process vectorized path (default on CPU),
+* ``"pallas"`` — the fused charge-share + sense-amp kernel
+  ``repro.kernels.ops.senseamp_resolve`` (Mosaic on TPU, interpret mode on
+  CPU), fed the *same* RNG draws as the numpy path,
+* ``"auto"`` — ``"pallas"`` when jax's default backend is a TPU, else
+  ``"numpy"``.
+
+Both backends draw identical noise/floor randomness per command, so they
+agree except where float32 re-association flips a sample sitting exactly
+on the comparator threshold (documented tolerance: <= 0.1% of bits on
+analog-noise scales; tested in tests/test_executor.py).  The backend only
+affects the ``error_model="analog"`` Boolean path — NOT's driven-restore
+model and the ideal/mean models are backend-independent.
 """
 from __future__ import annotations
 
@@ -119,7 +149,8 @@ class BankSim:
                  row_bits: int | None = None, seed: int = 0,
                  params: AnalogParams | None = None, temp_c: float = 50.0,
                  error_model: str = "analog", trials: int | None = None,
-                 track_unshared: bool = True):
+                 track_unshared: bool = True, noise_seed: int | None = None,
+                 resolve_backend: str = "auto"):
         self.module = (get_module(module) if isinstance(module, str)
                        else module or get_module())
         geom = self.module.geometry
@@ -133,6 +164,11 @@ class BankSim:
         assert error_model in ("analog", "mean", "ideal", "none")
         self.error_model = error_model
         self.seed = seed
+        #: independent per-trial noise stream (chip identity stays ``seed``)
+        self.noise_seed = seed if noise_seed is None else int(noise_seed)
+        if resolve_backend not in ("auto", "numpy", "pallas"):
+            raise ValueError(f"unknown resolve backend {resolve_backend!r}")
+        self.resolve_backend = resolve_backend
         if trials is not None and trials < 1:
             raise ValueError(f"trials must be >= 1, got {trials}")
         #: None = legacy scalar API (rows are 1-D); int T = batched trials
@@ -262,7 +298,29 @@ class BankSim:
     def _rng(self) -> np.random.Generator:
         self._trial += 1
         return np.random.default_rng(
-            np.random.SeedSequence([self.seed, 0x7A1A1, self._trial]))
+            np.random.SeedSequence([self.noise_seed, 0x7A1A1, self._trial]))
+
+    def reseed_noise(self, noise_seed: int) -> None:
+        """Point subsequent per-trial noise draws at an independent stream.
+
+        Chip identity — the decoder's activation map and the static per-SA
+        offsets — stays tied to ``seed``; only the per-command noise/floor
+        generators change.  The command counter restarts so the stream is a
+        pure function of ``noise_seed`` (callers pass unique seeds, e.g.
+        ``np.random.SeedSequence(seed).spawn`` children)."""
+        self.noise_seed = int(noise_seed)
+        self._trial = 0
+
+    def _resolve_backend(self) -> str:
+        """Effective resolve backend ('auto' settles on first use)."""
+        if self.resolve_backend == "auto":
+            try:
+                import jax
+                self.resolve_backend = \
+                    "pallas" if jax.default_backend() == "tpu" else "numpy"
+            except Exception:          # jax not importable: numpy-only env
+                self.resolve_backend = "numpy"
+        return self.resolve_backend
 
     def static_offsets(self, stripe: int, op: str, n: int, *,
                        random_pattern: bool = True,
@@ -389,17 +447,12 @@ class BankSim:
         w = self.shared_w
         return slice(w, 2 * w) if sl.start == 0 else slice(0, w)
 
-    def _resolve(self, margin: np.ndarray, stripe: int, op: str, n: int, *,
-                 regions: tuple[int, int], random_pattern: bool,
-                 rng: np.random.Generator) -> np.ndarray:
-        """Sense-amp comparator outcome (bool per (trial, shared column)).
-
-        ``margin`` is (T, w); static offsets broadcast across trials (one
-        physical chip), noise/floor draws are per-trial.
-        """
+    def _resolve_params(self, stripe: int, op: str, n: int, *,
+                        regions: tuple[int, int], random_pattern: bool):
+        """Shared analog-model scalars of one comparator resolve:
+        (margin offset dv, noise sigma s, threshold shift, static offsets,
+        activation-failure floor pf)."""
         p = self.params
-        if self.error_model in ("ideal", "none", "mean"):
-            return margin > 0.0
         dv = A.margin_offset(op, p, compute_region=regions[0],
                              ref_region=regions[1],
                              mfr=self.module.manufacturer.value,
@@ -414,14 +467,31 @@ class BankSim:
         static = self.static_offsets(stripe, op, n,
                                      random_pattern=random_pattern) \
             .astype(self._noise_dtype, copy=False)
+        pf = A.op_pfloor(op, n, p, temp_c=self.temp_c,
+                         random_pattern=random_pattern,
+                         speed_mts=self.module.speed_mts)
+        return dv, s, shift, static, pf
+
+    def _resolve(self, margin: np.ndarray, stripe: int, op: str, n: int, *,
+                 regions: tuple[int, int], random_pattern: bool,
+                 rng: np.random.Generator) -> np.ndarray:
+        """Sense-amp comparator outcome (bool per (trial, shared column)).
+
+        ``margin`` is (T, w); static offsets broadcast across trials (one
+        physical chip), noise/floor draws are per-trial.  This is the numpy
+        backend; the pallas backend (:meth:`_resolve_pallas`) consumes the
+        same draws through the fused kernel.
+        """
+        p = self.params
+        if self.error_model in ("ideal", "none", "mean"):
+            return margin > 0.0
+        dv, s, shift, static, pf = self._resolve_params(
+            stripe, op, n, regions=regions, random_pattern=random_pattern)
         acc = rng.standard_normal(margin.shape, dtype=self._noise_dtype)
         acc *= math.sqrt(max(1.0 - STATIC_SPLIT ** 2, 0.0)) * s
         acc += margin
         acc += static
         out = acc > -(dv - shift - p.delta_v)
-        pf = A.op_pfloor(op, n, p, temp_c=self.temp_c,
-                         random_pattern=random_pattern,
-                         speed_mts=self.module.speed_mts)
         if self.batched:
             # one uniform: conditioned on u < pf, (u < pf/2) is a fair coin
             u = rng.random(margin.shape, dtype=self._noise_dtype)
@@ -429,6 +499,47 @@ class BankSim:
         flip = rng.random(margin.shape, dtype=self._noise_dtype) < pf
         coin = rng.random(margin.shape, dtype=self._noise_dtype) < 0.5
         return np.where(flip, coin, out)
+
+    def _resolve_pallas(self, com_cells: np.ndarray, ref_cells: np.ndarray,
+                        u_com: float, u_ref: float, stripe: int, op: str,
+                        n: int, *, regions: tuple[int, int],
+                        random_pattern: bool,
+                        rng: np.random.Generator) -> np.ndarray:
+        """Fused charge-share + sense-amp resolve through the Pallas kernel.
+
+        ``com_cells`` / ``ref_cells`` are the activated cell slabs
+        ``(T, n_rows, w)``; the kernel recomputes the charge-shared margin
+        itself (``repro.kernels.senseamp``).  RNG consumption matches
+        :meth:`_resolve` draw-for-draw, so at one seed the two backends
+        differ only by float32 re-association at the comparator threshold.
+        """
+        from ..kernels import ops as kops
+        p = self.params
+        dv, s, shift, static, pf = self._resolve_params(
+            stripe, op, n, regions=regions, random_pattern=random_pattern)
+        shape = com_cells.shape[:1] + com_cells.shape[2:]      # (T, w)
+        nz = rng.standard_normal(shape, dtype=self._noise_dtype)
+        if self.batched:
+            u = rng.random(shape, dtype=self._noise_dtype)
+            # same single-uniform flip/coin decisions as the numpy path:
+            # the kernel's coin is (un[1] < 0.5), so encode it as 0/1
+            coin = np.where(u < 0.5 * pf, np.float32(0.0), np.float32(1.0))
+            un = np.stack([u.astype(np.float32, copy=False), coin])
+        else:
+            flip_u = rng.random(shape, dtype=self._noise_dtype)
+            coin_u = rng.random(shape, dtype=self._noise_dtype)
+            un = np.stack([flip_u, coin_u]).astype(np.float32, copy=False)
+        trial_sigma = math.sqrt(max(1.0 - STATIC_SPLIT ** 2, 0.0)) * s
+        # numpy threshold: margin + static + noise > -(dv - shift - delta_v)
+        # kernel threshold: margin_k - shift_k + static + noise > 0
+        out = kops.senseamp_resolve_trials(
+            com_cells, ref_cells,
+            static.astype(np.float32, copy=False),
+            nz.astype(np.float32, copy=False), un,
+            u_com=float(u_com), u_ref=float(u_ref),
+            shift=float(shift + p.delta_v - dv), pf=float(pf),
+            trial_sigma=float(trial_sigma))
+        return np.asarray(out).astype(bool)
 
     def _maj_restore(self, sub: int, rows, cols: slice,
                      rng: np.random.Generator) -> None:
@@ -519,16 +630,23 @@ class BankSim:
             u_l = A.u_n(n_l, self.params)
             v_f = u_f * (np.sum(arr_f[:, rows_f, f_cols], axis=1)
                          - 0.5 * n_f)
-            v_l = u_l * (np.sum(arr_l[:, rows_l, l_cols], axis=1)
-                         - 0.5 * n_l)
-            # margin convention: compute side (R_L, §6) minus reference (R_F)
-            margin = v_l - v_f                          # (T, w)
             # noise context: the reference level sets the common mode
             # (V_REF > VDD/2 -> AND-family, < VDD/2 -> OR-family)
             op_ctx = "and" if float(np.mean(v_f)) >= 0.0 else "or"
-            out = self._resolve(margin, stripe, op_ctx, n_l,
-                                regions=(reg_l, reg_f),
-                                random_pattern=random_pattern, rng=rng)
+            if self.error_model == "analog" \
+                    and self._resolve_backend() == "pallas":
+                out = self._resolve_pallas(
+                    arr_l[:, rows_l, l_cols], arr_f[:, rows_f, f_cols],
+                    u_l, u_f, stripe, op_ctx, n_l, regions=(reg_l, reg_f),
+                    random_pattern=random_pattern, rng=rng)
+            else:
+                v_l = u_l * (np.sum(arr_l[:, rows_l, l_cols], axis=1)
+                             - 0.5 * n_l)
+                # margin: compute side (R_L, §6) minus reference (R_F)
+                margin = v_l - v_f                      # (T, w)
+                out = self._resolve(margin, stripe, op_ctx, n_l,
+                                    regions=(reg_l, reg_f),
+                                    random_pattern=random_pattern, rng=rng)
             outf = out.astype(np.float32)
             arr_l[:, rows_l, l_cols] = outf[:, None, :]
             arr_f[:, rows_f, f_cols] = (1.0 - outf)[:, None, :]

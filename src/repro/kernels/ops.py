@@ -75,6 +75,21 @@ def senseamp_resolve(com_cells, ref_cells, static, normals, uniforms, *,
         interpret=it)
 
 
+def senseamp_resolve_trials(com_cells, ref_cells, static, normals,
+                            uniforms, *, u_com: float, u_ref: float,
+                            shift: float, pf: float, trial_sigma: float,
+                            interpret: bool | None = None) -> jax.Array:
+    """Trial-batched resolve: (T, N, W) cell slabs -> (T, W) uint8.
+
+    The entry point ``BankSim(resolve_backend="pallas")`` calls per APA.
+    """
+    it = _interpret_default() if interpret is None else interpret
+    return _senseamp.senseamp_resolve_trials(
+        com_cells, ref_cells, static, normals, uniforms, u_com=u_com,
+        u_ref=u_ref, shift=shift, pf=pf, trial_sigma=trial_sigma,
+        interpret=it)
+
+
 # ---------------------------------------------------------------------------
 # Convenience: unpacked-bit entry points (uint8 vectors)
 # ---------------------------------------------------------------------------

@@ -132,6 +132,22 @@ def senseamp_resolve(v_com: jax.Array, v_ref: jax.Array,
     return jnp.where(flip, coin, out).astype(jnp.uint8)
 
 
+def senseamp_resolve_trials(com_cells: jax.Array, ref_cells: jax.Array,
+                            static: jax.Array, normals: jax.Array,
+                            uniforms: jax.Array, *, u_com: float,
+                            u_ref: float, shift: float, pf: float,
+                            trial_sigma: float) -> jax.Array:
+    """Trial-batched oracle of the fused charge-share + resolve kernel.
+
+    com_cells/ref_cells: (T, N, W) cell voltages; static (W,) shared across
+    trials; normals (T, W); uniforms (2, T, W) -> (T, W) uint8.
+    """
+    v_com = jnp.sum(com_cells - 0.5, axis=1) * u_com       # (T, W)
+    v_ref = jnp.sum(ref_cells - 0.5, axis=1) * u_ref
+    return senseamp_resolve(v_com, v_ref, static, normals, uniforms,
+                            shift=shift, pf=pf, trial_sigma=trial_sigma)
+
+
 # ---------------------------------------------------------------------------
 # packing helpers (shared by ops + tests)
 # ---------------------------------------------------------------------------

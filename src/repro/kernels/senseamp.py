@@ -6,10 +6,12 @@ logic values of every shared column in one pass — charge sharing (mean over
 activated cells), static per-SA offset, per-trial Gaussian noise, threshold
 shift (Frac drift) and the activation-failure coin flip.
 
-Used by ``repro.pud.engine`` for fast error injection when simulating large
-in-DRAM workloads (millions of columns), where the numpy BankSim would
-dominate runtime.  Matches ``repro.kernels.ref.senseamp_resolve`` and the
-numpy ``BankSim._resolve`` semantics.
+Wired into the simulator as ``BankSim(resolve_backend="pallas")``: every
+Boolean-protocol APA routes its comparator resolve through this kernel
+(via :func:`senseamp_resolve_trials`, which folds the Monte-Carlo trial
+axis into the lane axis), Mosaic-compiled on TPU and interpret-mode on
+CPU.  Matches ``repro.kernels.ref.senseamp_resolve`` and the numpy
+``BankSim._resolve`` semantics.
 
 Inputs (W = number of shared columns, padded to a lane multiple):
   com_cells: (N_com, W) f32 — compute-side cell voltages in [0,1]
@@ -88,3 +90,33 @@ def senseamp_resolve(com_cells: jax.Array, ref_cells: jax.Array,
         out_specs=pl.BlockSpec((TILE_W,), lambda i: (i,)),
         interpret=interpret,
     )(com_cells, ref_cells, static, normals, uniforms)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("u_com", "u_ref", "shift", "pf",
+                                    "trial_sigma", "interpret"))
+def senseamp_resolve_trials(com_cells: jax.Array, ref_cells: jax.Array,
+                            static: jax.Array, normals: jax.Array,
+                            uniforms: jax.Array, *, u_com: float,
+                            u_ref: float, shift: float, pf: float,
+                            trial_sigma: float,
+                            interpret: bool = False) -> jax.Array:
+    """Trial-batched front end: fold the Monte-Carlo trial axis into lanes.
+
+    com_cells: (T, N_com, W) f32 — per-trial compute-side cell voltages
+    ref_cells: (T, N_ref, W) f32 — per-trial reference-side voltages
+    static:    (W,) f32           — per-SA offsets, shared across trials
+    normals:   (T, W) f32         — per-trial standard normal draws
+    uniforms:  (2, T, W) f32      — per-trial floor flip + coin draws
+    -> (T, W) uint8.  Every (trial, column) pair is an independent sense
+    amp, so trials flatten losslessly into the kernel's lane axis (one
+    pallas_call for the whole Monte-Carlo batch).
+    """
+    t, n_com, w = com_cells.shape
+    com2 = jnp.moveaxis(com_cells, 1, 0).reshape(n_com, t * w)
+    ref2 = jnp.moveaxis(ref_cells, 1, 0).reshape(ref_cells.shape[1], t * w)
+    out = senseamp_resolve(
+        com2, ref2, jnp.tile(static, t), normals.reshape(t * w),
+        uniforms.reshape(2, t * w), u_com=u_com, u_ref=u_ref, shift=shift,
+        pf=pf, trial_sigma=trial_sigma, interpret=interpret)
+    return out.reshape(t, w)

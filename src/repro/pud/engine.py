@@ -20,22 +20,41 @@ the trial axis of one ``BankSim(trials=C)`` episode (all chunks of a block
 run the same command sequence on the same activation pair).  The legacy
 path advanced the scrambled pair walk per chunk; to keep noisy-mode error
 statistics region-mixed, planes with >= 4 chunks are split over at least
-``DRAM_MIN_PAIR_SWEEP`` blocks, each advancing the pair cursor.
+``DRAM_MIN_PAIR_SWEEP`` blocks, each advancing the pair cursor.  Every
+block additionally gets an independent noise stream (a
+``np.random.SeedSequence(seed).spawn`` child reseeds the cached sim via
+``BankSim.reseed_noise``) so error patterns never repeat across blocks or
+planes while the simulated chip — decoder map + static offsets — stays
+the same.
+
+Compiled Boolean *programs* (``repro.core.compiler.Program``) execute on
+any backend through :meth:`PudEngine.run_program`: jnp / Pallas run each
+instruction on whole packed planes; dram runs the trial-batched program
+executor (``compiler.run_sim``) per chunk block.  ``add`` routes in-DRAM
+arithmetic the same way.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import compiler as CC
 from ..core.device import get_module
 from ..core.isa import CostModel, OpCost, PudIsa
 from ..core.simulator import BankSim
 from ..kernels import ops as kops
 
 BACKENDS = ("jnp", "pallas", "dram")
+
+
+@lru_cache(maxsize=16)
+def _adder_program(k: int) -> CC.Program:
+    """K-bit ripple-carry adder lowered to the native PuD op set."""
+    return CC.compile_expr(CC.adder_exprs(k))
 
 
 @dataclass
@@ -93,22 +112,38 @@ class PudEngine:
         self.seed = seed
         self._isa: PudIsa | None = None
         self._batched_isa: dict[int, PudIsa] = {}
+        #: per-block noise-stream derivation (chip identity stays ``seed``)
+        self._seed_seq = np.random.SeedSequence(seed)
         if backend == "dram":
             sim = BankSim(self.module, seed=seed,
                           error_model="analog" if noisy else "ideal")
             self._isa = PudIsa(sim)
 
+    def _next_noise_seed(self) -> int:
+        """A fresh, deterministic noise-stream seed for the next block."""
+        return int(self._seed_seq.spawn(1)[0].generate_state(1, np.uint64)[0])
+
     def _isa_for(self, n_chunks: int) -> PudIsa:
-        """ISA over a trial-batched BankSim with ``n_chunks`` trials
-        (cached per batch size; single-chunk work uses the scalar sim)."""
+        """ISA for one chunk block: a trial-batched BankSim with
+        ``n_chunks`` trials (cached per batch size; single-chunk work uses
+        the scalar sim).  Each call dedicates an independent noise stream
+        to the block — cached sims are *rebuilt* from ``self.seed`` per
+        batch size, so without reseeding, equal-trial blocks of different
+        calls (and the leading trials of different-size blocks) would draw
+        identical error patterns.  Row slots are recycled so the working
+        set stays bounded by one op's rows."""
         if n_chunks <= 1:
-            return self._isa
-        if n_chunks not in self._batched_isa:
-            sim = BankSim(self.module, seed=self.seed,
-                          error_model="analog" if self.noisy else "ideal",
-                          trials=n_chunks, track_unshared=False)
-            self._batched_isa[n_chunks] = PudIsa(sim)
-        return self._batched_isa[n_chunks]
+            isa = self._isa
+        else:
+            if n_chunks not in self._batched_isa:
+                sim = BankSim(self.module, seed=self.seed,
+                              error_model="analog" if self.noisy else "ideal",
+                              trials=n_chunks, track_unshared=False)
+                self._batched_isa[n_chunks] = PudIsa(sim)
+            isa = self._batched_isa[n_chunks]
+        isa.sim.reseed_noise(self._next_noise_seed())
+        isa.sim.recycle_rows()
+        return isa
 
     # ------------- accounting -------------
     def _meter(self, op: str, n_inputs: int, n_bits: int) -> None:
@@ -148,15 +183,25 @@ class PudEngine:
         return ~plane
 
     def add(self, a: jax.Array, b: jax.Array) -> jax.Array:
-        """Bit-serial adder: (K, R, C) + (K, R, C) -> (K+1, R, C)."""
+        """Bit-serial adder: (K, R, C) + (K, R, C) -> (K+1, R, C).
+
+        jnp/pallas use the fused ripple-carry kernel; the dram backend
+        synthesizes the adder from the paper's native op set
+        (``compiler.adder_exprs``) and runs it through the trial-batched
+        program executor, metering each native instruction.
+        """
         k, r, c = a.shape
+        if self.backend == "dram":
+            prog = _adder_program(k)
+            planes = {f"a{i}": a[i] for i in range(k)} \
+                | {f"b{i}": b[i] for i in range(k)}
+            out = self.run_program(prog, planes)
+            return jnp.stack([out[f"s{i}"] for i in range(k)]
+                             + [out["cout"]])
         # 12 native ops per plane (compiler.adder_exprs)
         self._meter("and", 2, 12 * k * r * c * 32)
         if self.backend == "pallas":
             return kops.add_planes(a, b)
-        if self.backend == "dram":
-            raise NotImplementedError(
-                "use repro.core.compiler.run_sim for in-DRAM arithmetic")
         return kops.ref.add_planes(a, b)
 
     def popcount(self, planes: jax.Array) -> jax.Array:
@@ -165,6 +210,95 @@ class PudEngine:
         if self.backend == "pallas":
             return kops.bitcount_planes(planes)
         return kops.ref.bitcount_planes(planes)
+
+    # ------------- compiled Boolean programs -------------
+    def run_program(self, prog: CC.Program,
+                    planes: dict[str, jax.Array]) -> dict[str, jax.Array]:
+        """Execute a compiled :class:`~repro.core.compiler.Program` over
+        packed ``(R, C)`` uint32 bit-planes on this backend.
+
+        ``planes`` maps the program's input names to equal-shape planes;
+        returns one plane per program output.  jnp/pallas execute each
+        instruction on whole planes; the dram backend splits the planes
+        into row chunks and runs the trial-batched program executor
+        (``compiler.run_sim``) one chunk block at a time.  Every compute
+        instruction is metered into the :class:`OffloadReport` (operand
+        staging is not; it is counted in ``Program.cost``)."""
+        if not planes:
+            raise ValueError("run_program needs at least one input plane")
+        named = {k: jnp.asarray(v, jnp.uint32) for k, v in planes.items()}
+        shapes = {v.shape for v in named.values()}
+        if len(shapes) != 1:
+            raise ValueError(f"input planes disagree on shape: {shapes}")
+        (shape,) = shapes
+        missing = {i.name for i in prog.instrs if i.op == "input"} \
+            - named.keys()
+        if missing:       # validate before metering: a failed run must not
+            raise ValueError(   # inflate the offload report
+                f"program inputs missing from planes: {sorted(missing)}")
+        r, c = shape
+        n_bits = r * c * 32
+        for i in prog.instrs:
+            if i.op == "not":
+                self._meter("not", 1, n_bits)
+            elif i.op in ("and", "or", "nand", "nor"):
+                self._meter(i.op, len(i.srcs), n_bits)
+        if self.backend == "dram":
+            return self._dram_run_program(prog, named, shape)
+        return self._planes_run_program(prog, named, shape)
+
+    def _planes_run_program(self, prog: CC.Program, planes, shape):
+        """Whole-plane program execution (jnp ops or Pallas kernels)."""
+        pallas = self.backend == "pallas"
+        regs: dict[int, jax.Array] = {}
+        for i in prog.instrs:
+            if i.op == "input":
+                regs[i.dst] = planes[i.name]
+            elif i.op == "const":
+                fill = jnp.uint32(0xFFFFFFFF if i.value else 0)
+                regs[i.dst] = jnp.full(shape, fill, jnp.uint32)
+            elif i.op == "not":
+                regs[i.dst] = (kops.bitwise_not(regs[i.srcs[0]])
+                               if pallas else ~regs[i.srcs[0]])
+            elif i.op in ("and", "or", "nand", "nor"):
+                stack = jnp.stack([regs[s] for s in i.srcs])
+                regs[i.dst] = (kops.nary_bitwise(stack, i.op) if pallas
+                               else kops.ref.nary_bitwise(i.op, stack))
+            else:
+                raise ValueError(i.op)
+        return {k: regs[v] for k, v in prog.outputs.items()}
+
+    def _dram_run_program(self, prog: CC.Program, planes, shape):
+        """Chunk-blocked program execution on the DRAM simulator: each
+        block of row chunks runs the whole program as one trial-batched
+        ``compiler.run_sim`` episode."""
+        r, c = shape
+        n_bits = r * c * 32
+        w = self._isa.width
+        chunks = {name: self._to_chunks(
+            np.asarray(kops.ref.unpack_bits(p)).reshape(n_bits), w)
+            for name, p in planes.items()}           # each (C, w)
+        n_chunks = -(-n_bits // w)
+        blk_sz = self._block_size(n_chunks)
+        pieces: dict[str, list[np.ndarray]] = {k: [] for k in prog.outputs}
+        for lo in range(0, n_chunks, blk_sz):
+            blk = {name: ch[lo:lo + blk_sz] for name, ch in chunks.items()}
+            t = next(iter(blk.values())).shape[0]
+            isa = self._isa_for(t)
+            if t == 1:
+                res = CC.run_sim(prog, {k: v[0] for k, v in blk.items()},
+                                 isa)
+                res = {k: v[None] for k, v in res.items()}
+            else:
+                res = CC.run_sim(prog, blk, isa)     # (t, w) planes
+            for name in pieces:
+                pieces[name].append(res[name])
+        out = {}
+        for name, ps in pieces.items():
+            flat = np.concatenate(ps, axis=0).reshape(-1)[:n_bits]
+            out[name] = kops.ref.pack_bits(
+                jnp.asarray(flat.reshape(r, c * 32)))
+        return out
 
     # ------------- DRAM backend plumbing -------------
     def _block_size(self, n_chunks: int) -> int:

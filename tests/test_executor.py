@@ -1,0 +1,164 @@
+"""Unified trial-batched program executor: parity across the three paths.
+
+* batched ``run_sim`` (one (T, width)-plane episode per instruction)
+* per-trial ``run_sim(batched=False)`` (the reference loop)
+* ``run_ideal`` (the exact oracle)
+
+plus the pluggable sense-amp resolve backends (numpy vs Pallas interpret)
+exercised inside *full* ``BankSim.apa`` episodes — the kernel unit test in
+tests/test_kernels.py covers the kernel alone; here the kernel runs where
+the engine runs it.
+"""
+import numpy as np
+import pytest
+
+from repro.core import charz
+from repro.core import compiler as CC
+from repro.core.isa import PudIsa
+from repro.core.simulator import BankSim
+
+#: documented tolerance for numpy-vs-pallas resolve parity: the backends
+#: consume identical RNG draws, so only float32 re-association exactly at
+#: the comparator threshold may differ (measure-zero on analog noise
+#: scales; we allow 1e-3 of bits).
+RESOLVE_MISMATCH_TOL = 1e-3
+
+
+def _adder_inputs(k, w, rng, trials=None):
+    shape = (k, w) if trials is None else (k, trials, w)
+    a = rng.integers(0, 2, shape).astype(np.uint8)
+    b = rng.integers(0, 2, shape).astype(np.uint8)
+    ins = {f"a{i}": a[i] for i in range(k)} | {f"b{i}": b[i] for i in range(k)}
+    return a, b, ins
+
+
+# ---------------------------------------------------------------------------
+# batched run_sim vs per-trial reference vs run_ideal
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("program", ["xor", "maj3", "add4"])
+def test_batched_run_sim_matches_ideal_and_per_trial(program):
+    """Ideal mode: the three executors agree bit-for-bit."""
+    prog = charz.get_program(program)
+    names = sorted({i.name for i in prog.instrs if i.op == "input"})
+    T, w = 5, 64
+    rng = np.random.default_rng(17)
+    ins = {n: rng.integers(0, 2, (T, w)).astype(np.uint8) for n in names}
+    ideal = CC.run_ideal(prog, ins, width=w)
+    batched = CC.run_sim(prog, ins, PudIsa(
+        BankSim(row_bits=2 * w, error_model="ideal", seed=7, trials=T)),
+        trials=T)
+    per_trial = CC.run_sim(prog, ins, PudIsa(
+        BankSim(row_bits=2 * w, error_model="ideal", seed=7)),
+        trials=T, batched=False)
+    for k in prog.outputs:
+        assert batched[k].shape == (T, w)
+        assert np.array_equal(batched[k], ideal[k]), k
+        assert np.array_equal(per_trial[k], ideal[k]), k
+
+
+def test_batched_run_sim_broadcasts_scalar_inputs():
+    """(w,) inputs broadcast across the trial axis; consts too."""
+    prog = CC.compile_expr(CC.Xor(CC.Var("a"), CC.Const(True)))
+    T, w = 4, 32
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 2, w).astype(np.uint8)
+    isa = PudIsa(BankSim(row_bits=2 * w, error_model="ideal", trials=T))
+    out = CC.run_sim(prog, {"a": a}, isa)["out"]
+    assert out.shape == (T, w)
+    assert np.array_equal(out, np.broadcast_to(1 - a, (T, w)))
+
+
+def test_run_sim_shape_and_mode_validation():
+    w = 32
+    prog = charz.get_program("xor")
+    batched_isa = PudIsa(BankSim(row_bits=2 * w, error_model="ideal",
+                                 trials=3))
+    scalar_isa = PudIsa(BankSim(row_bits=2 * w, error_model="ideal"))
+    ins = {"a": np.zeros(w, np.uint8), "b": np.zeros(w, np.uint8)}
+    with pytest.raises(ValueError):        # trial-count pin mismatch
+        CC.run_sim(prog, ins, batched_isa, trials=5)
+    with pytest.raises(ValueError):        # reference path needs scalar sim
+        CC.run_sim(prog, ins, batched_isa, trials=3, batched=False)
+    with pytest.raises(ValueError):        # bad input width
+        CC.run_sim(prog, {"a": np.zeros((3, w + 1), np.uint8),
+                          "b": np.zeros(w, np.uint8)}, batched_isa)
+    # scalar path still the legacy behavior
+    out = CC.run_sim(prog, ins, scalar_isa)
+    assert out["out"].shape == (w,)
+
+
+def test_batched_run_sim_noisy_statistics_match_reference(mc_trials):
+    """Noisy mode at pinned seeds: batched and per-trial program success
+    agree within Monte-Carlo error (they sample different pair walks)."""
+    t = mc_trials(144, 72)
+    b = charz.mc_program_success("xor", trials=t, row_bits=1024, seed=5)
+    p = charz.mc_program_success("xor", trials=t, row_bits=1024, seed=5,
+                                 batched=False)
+    assert abs(b - p) < 0.05, (b, p)
+
+
+def test_mc_program_success_sane_range(mc_trials):
+    """Composed-program success sits between the coin-flip floor and the
+    best single op; the independent-op estimate is a loose lower bound
+    (errors only count when they propagate to an output)."""
+    t = mc_trials(108, 54)
+    xor = charz.mc_program_success("xor", trials=t, row_bits=1024, seed=8)
+    add = charz.mc_program_success("add4", trials=max(t // 3, 18),
+                                   row_bits=1024, seed=8)
+    one_op = charz.mc_boolean_success("nand", 2, trials=t, row_bits=1024,
+                                      seed=8)
+    assert 0.25 < add < one_op
+    assert 0.25 < xor < one_op
+    assert xor > charz.program_success_estimate("xor") - 0.05
+
+
+# ---------------------------------------------------------------------------
+# resolve backends inside full apa episodes
+# ---------------------------------------------------------------------------
+def _nary_through_backend(backend, *, trials, seed=11, n=4, op="and"):
+    sim = BankSim(row_bits=512, seed=seed, error_model="analog",
+                  trials=trials, track_unshared=False,
+                  resolve_backend=backend)
+    isa = PudIsa(sim)
+    rng = np.random.default_rng(99)
+    t = trials or 1
+    ops = rng.integers(0, 2, (n, t, isa.width)).astype(np.uint8)
+    if trials is None:
+        return isa.nary_op(op, list(ops[:, 0]), pair_index=0)
+    return isa.nary_op(op, ops, pair_index=0)
+
+
+@pytest.mark.parametrize("op", ["and", "nor"])
+def test_resolve_backend_parity_batched_apa(op):
+    """numpy vs Pallas(interpret) resolve inside a trial-batched Boolean
+    APA episode: identical RNG draws -> near-bit-exact agreement."""
+    a = _nary_through_backend("numpy", trials=12, op=op)
+    b = _nary_through_backend("pallas", trials=12, op=op)
+    assert a.shape == b.shape == (12, 256)
+    assert np.mean(a != b) <= RESOLVE_MISMATCH_TOL, np.mean(a != b)
+
+
+def test_resolve_backend_parity_scalar_apa():
+    a = _nary_through_backend("numpy", trials=None)
+    b = _nary_through_backend("pallas", trials=None)
+    assert np.mean(a != b) <= RESOLVE_MISMATCH_TOL
+
+
+def test_resolve_backend_parity_through_program(mc_trials):
+    """A whole compiled program through both backends stays statistically
+    aligned (scrambled pair walks consume the same RNG streams)."""
+    t = mc_trials(72, 36)
+    prog = charz.get_program("xor")
+    outs = {}
+    for backend in ("numpy", "pallas"):
+        sim = BankSim(row_bits=512, seed=6, error_model="analog", trials=t,
+                      track_unshared=False, resolve_backend=backend)
+        isa = PudIsa(sim)
+        rng = np.random.default_rng(41)
+        ins = {"a": rng.integers(0, 2, (t, isa.width)).astype(np.uint8),
+               "b": rng.integers(0, 2, (t, isa.width)).astype(np.uint8)}
+        outs[backend] = CC.run_sim(prog, ins, isa, trials=t)["out"]
+    frac = np.mean(outs["numpy"] != outs["pallas"])
+    # every NAND resolves through a fresh per-command RNG shared by both
+    # backends, so even composed programs track near-bit-exactly
+    assert frac <= 10 * RESOLVE_MISMATCH_TOL, frac

@@ -117,6 +117,21 @@ def test_senseamp_matches_ref_and_sim_semantics():
     assert (np.asarray(got) == np.asarray(want)).all()
 
 
+def test_senseamp_resolve_trials_matches_ref():
+    """Trial axis folded into lanes == per-trial reference semantics."""
+    t, n, w = 5, 3, 700
+    com = jnp.asarray(RNG.random((t, n, w), dtype=np.float32))
+    rfc = jnp.asarray(RNG.random((t, n, w), dtype=np.float32))
+    st_ = jnp.asarray(RNG.normal(0, .02, w).astype(np.float32))
+    nz = jnp.asarray(RNG.normal(0, 1, (t, w)).astype(np.float32))
+    un = jnp.asarray(RNG.random((2, t, w), dtype=np.float32))
+    kw = dict(u_com=.09, u_ref=.11, shift=.015, pf=.03, trial_sigma=.01)
+    got = ops.senseamp_resolve_trials(com, rfc, st_, nz, un, **kw)
+    want = ref.senseamp_resolve_trials(com, rfc, st_, nz, un, **kw)
+    assert got.shape == (t, w)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
 def test_senseamp_degenerate_floor():
     """pf=1 -> pure coin flip from uniforms."""
     w = 1024
