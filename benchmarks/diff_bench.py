@@ -23,10 +23,15 @@ import sys
 def _success_keys(snap: dict) -> dict[str, float]:
     """Flat {metric: success-rate in [0,1]} view of one snapshot."""
     out: dict[str, float] = {}
-    for section, prefix in (("charz_speedup_detail", "op"),
-                            ("program_speedup_detail", "program")):
+    for section, prefix, kinds in (
+            ("charz_speedup_detail", "op",
+             ("per_trial_success", "batched_success")),
+            ("program_speedup_detail", "program",
+             ("per_trial_success", "batched_success")),
+            ("resident_detail", "resident",
+             ("staged_success", "resident_success"))):
         for name, d in snap.get(section, {}).items():
-            for kind in ("per_trial_success", "batched_success"):
+            for kind in kinds:
                 if kind in d:
                     out[f"{prefix}.{name}.{kind}"] = float(d[kind])
     return out

@@ -7,6 +7,8 @@ Prints CSV sections:
     (the PR-over-PR perf trajectory headline),
   * program-level Monte-Carlo (XOR / MAJ3 / ripple adder through the
     unified trial-batched executor) per-trial vs batched,
+  * resident-register vs host-staged program execution (RowClone-chained
+    intermediates: host-write bus-byte reduction at matched success),
   * in-DRAM vs CPU cost model (the paper's motivation, Table-style),
   * kernel micro-benchmarks (packed-op throughput on this host),
   * PuD-engine offload accounting on LM workloads.
@@ -14,7 +16,7 @@ Prints CSV sections:
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]
 
 ``--json`` additionally writes machine-readable timings + success-rate
-deltas (default path BENCH_pr2.json) so CI can archive the trajectory;
+deltas (default path BENCH_pr3.json) so CI can archive the trajectory;
 ``benchmarks.diff_bench`` compares snapshots across PRs/nightlies.
 """
 from __future__ import annotations
@@ -274,6 +276,79 @@ def program_mc_speedup(fast=False):
     return speedup
 
 
+def resident_vs_staged(fast=False):
+    """Resident-register vs host-staged program execution on the DRAM
+    simulator: same compiled programs, same seeds — the resident executor
+    chains intermediates in-bank via RowClone, so host-write bus traffic
+    collapses (acceptance target: >= 50% fewer host-write bytes on the
+    4-bit adder) at matched Monte-Carlo success.
+    """
+    import numpy as np
+    from repro.core import charz
+    from repro.core import compiler as CC
+    from repro.core.isa import PudIsa
+    from repro.core.simulator import BankSim
+
+    trials = {"xor": 216, "maj3": 216, "add4": 54 if fast else 108}
+    rows = []
+    detail = {}
+    for name, tr in trials.items():
+        prog = charz.get_program(name)
+        names = sorted({i.name for i in prog.instrs if i.op == "input"})
+        # success at equal seeds / trial counts
+        t0 = time.perf_counter()
+        s_stg = float(charz.mc_program_success(name, trials=tr, seed=0))
+        t_stg = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        s_res = float(charz.mc_program_success(name, trials=tr, seed=0,
+                                               resident=True))
+        t_res = time.perf_counter() - t0
+        # command-stream traffic of one trial-batched run per mode
+        traffic = {}
+        for resident in (False, True):
+            sim = BankSim(row_bits=2048, seed=0, error_model="analog",
+                          trials=12, track_unshared=False)
+            isa = PudIsa(sim)
+            rng = np.random.default_rng(1)
+            ins = {n: rng.integers(0, 2, (12, isa.width)).astype(np.uint8)
+                   for n in names}
+            CC.run_sim(prog, ins, isa, resident=resident)
+            row_bytes = sim.geom.row_bits // 8
+            traffic[resident] = {
+                "wr_bytes": sim.log.counts.get("WR", 0) * row_bytes,
+                "rd_bytes": sim.log.counts.get("RD", 0) * row_bytes,
+                "rowclones": sim.log.counts.get("RC", 0),
+                "apas": sim.log.counts.get("APA", 0),
+                "energy_pj": sim.log.energy_pj,
+            }
+        red = 1.0 - traffic[True]["wr_bytes"] / traffic[False]["wr_bytes"]
+        rows.append((name, tr, round(100 * s_stg, 2), round(100 * s_res, 2),
+                     traffic[False]["wr_bytes"], traffic[True]["wr_bytes"],
+                     round(100 * red, 1), traffic[True]["rowclones"],
+                     round(t_stg, 3), round(t_res, 3)))
+        detail[name] = {
+            "trials": tr,
+            "staged_success": s_stg, "resident_success": s_res,
+            "staged_wr_bytes": traffic[False]["wr_bytes"],
+            "resident_wr_bytes": traffic[True]["wr_bytes"],
+            "staged_rd_bytes": traffic[False]["rd_bytes"],
+            "resident_rd_bytes": traffic[True]["rd_bytes"],
+            "wr_byte_reduction": red,
+            "rowclones": traffic[True]["rowclones"],
+            "staged_s": t_stg, "resident_s": t_res,
+        }
+    _csv("Resident vs host-staged program execution (DRAM backend)",
+         rows,
+         "program,trials,staged_succ,resident_succ,staged_wr_B,"
+         "resident_wr_B,wr_reduction_pct,rowclones,staged_s,resident_s")
+    red4 = detail["add4"]["wr_byte_reduction"]
+    _p(f"add4 resident host-write byte reduction: {100 * red4:.1f}% "
+       f"(target >= 50%)")
+    RESULTS["resident_detail"] = detail
+    RESULTS["resident_wr_reduction_add4"] = red4
+    return red4
+
+
 def calibration_scorecard():
     from repro.core import analog as A
     from repro.core import calibrate as C
@@ -373,7 +448,7 @@ def _json_path(argv) -> str | None:
     i = argv.index("--json")
     if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
         return argv[i + 1]
-    return "BENCH_pr2.json"
+    return "BENCH_pr3.json"
 
 
 def main() -> None:
@@ -393,6 +468,7 @@ def main() -> None:
     fig17_21_op_modifiers()
     charz_batched_speedup(fast=fast)
     program_mc_speedup(fast=fast)
+    resident_vs_staged(fast=fast)
     calibration_scorecard()
     cost_model_table()
     reliability_planning()

@@ -26,13 +26,16 @@ for op in ("and", "nand", "or", "nor"):
           f"paper {100 * d['paper_16'][op]:.2f}%")
 
 print("\nProgram-level success (trial-batched executor, 108 trials)")
-print("  program  native_ops  MC_success  indep_op_est")
+print("  program  native_ops  MC_staged  MC_resident  indep_op_est")
 for name in ("xor", "maj3", "add4"):
     prog = charz.get_program(name)
     n_ops = sum(1 for i in prog.instrs if i.op not in ("input", "const"))
     p = charz.mc_program_success(name, trials=108, row_bits=1024)
+    pr = charz.mc_program_success(name, trials=108, row_bits=1024,
+                                  resident=True)
     est = charz.program_success_estimate(name)
-    print(f"  {name:7s} {n_ops:10d} {100 * p:10.2f}% {100 * est:11.2f}%")
+    print(f"  {name:7s} {n_ops:10d} {100 * p:9.2f}% {100 * pr:10.2f}% "
+          f"{100 * est:11.2f}%")
 
 print("\nObs 3 - per-cell NOT success map (perfect cells exist)")
 m = charz.measure_cell_map_not(trials=120, row_bits=1024)

@@ -70,3 +70,14 @@ pb = rng.integers(0, 2, (trials, noisy.width)).astype(np.uint8)
 out = CC.run_sim(xor_prog, {"a": pa, "b": pb}, noisy, trials=trials)
 print(f"  measured XOR-from-4-NANDs program: "
       f"{100 * np.mean(out['out'] == (pa ^ pb)):.2f}%")
+
+# resident-register execution chains the intermediates in-bank via
+# RowClone instead of round-tripping each NAND result through the host:
+# same statistic, a fraction of the bus traffic (see sim.log / IsaStats)
+noisy.sim.recycle_rows()
+wr0 = noisy.sim.log.counts.get("WR", 0)
+out_r = CC.run_sim(xor_prog, {"a": pa, "b": pb}, noisy, resident=True)
+print(f"  resident (RowClone-chained) XOR:   "
+      f"{100 * np.mean(out_r['out'] == (pa ^ pb)):.2f}%  "
+      f"(host WRs this run: {noisy.sim.log.counts['WR'] - wr0}, "
+      f"rowclones: {noisy.stats.rowclones})")

@@ -24,7 +24,10 @@ statistic one level up: whole compiled Boolean programs (XOR-from-NANDs,
 MAJ3, ripple-carry adders) execute on the noisy simulator through the
 trial-batched program executor (``compiler.run_sim``), reproducing the
 composed-operation reliability methodology of the follow-on PuD works
-(PULSAR, Simultaneous Many-Row Activation).
+(PULSAR, Simultaneous Many-Row Activation).  ``resident=True`` runs the
+same statistic through the resident-register executor (RowClone-chained
+intermediates) — the command stream the paper's in-bank cost argument
+actually assumes.
 """
 from __future__ import annotations
 
@@ -304,7 +307,7 @@ def program_success_estimate(name: str, module: str | None = None,
 def mc_program_success(program: str | CC.Program, *, trials: int = 200,
                        row_bits: int = 2048, seed: int = 0,
                        module: str | None = None, temp_c: float = 50.0,
-                       batched: bool = True,
+                       batched: bool = True, resident: bool = False,
                        groups: int = MC_PAIR_GROUPS) -> float:
     """Bit-averaged MC success of a whole compiled program on the noisy
     simulator: every output bit of every trial is compared against
@@ -318,12 +321,19 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
     ``batched=False`` is the per-trial reference: one full program
     execution per trial on a scalar sim (same statistic; the walk then
     advances every instruction of every trial).
+
+    ``resident=True`` routes execution through the resident-register
+    executor (RowClone-chained intermediates) instead of the host-staged
+    path — the same statistic over a different command stream (requires
+    ``batched=True``; rows are recycled between groups, not mid-program).
     """
     prog = get_program(program) if isinstance(program, str) else program
     names = sorted({i.name for i in prog.instrs if i.op == "input"})
     rng = np.random.default_rng(seed + 1)
     ok = 0
     tot = 0
+    if resident and not batched:
+        raise ValueError("resident=True requires batched=True")
     if batched:
         groups = max(1, min(groups, trials))
         tg = max(1, -(-trials // groups))
@@ -332,8 +342,10 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
                       track_unshared=False)
         isa = PudIsa(sim)
         for _g in range(groups):
+            if resident:
+                sim.recycle_rows()   # resident runs re-stage all state
             ins = {n: _random_bits(rng, (tg, isa.width)) for n in names}
-            got = CC.run_sim(prog, ins, isa, trials=tg)
+            got = CC.run_sim(prog, ins, isa, trials=tg, resident=resident)
             want = CC.run_ideal(prog, ins, width=isa.width)
             ok += sum(int(np.sum(got[k] == want[k])) for k in prog.outputs)
             tot += sum(got[k].size for k in prog.outputs)

@@ -22,10 +22,15 @@ executors share the IR:
     command-accurate); **trial-batched** on a ``BankSim(trials=T)`` ISA,
     where registers are ``(T, width)`` planes and every instruction is one
     vectorized Monte-Carlo episode (``batched=False`` keeps the per-trial
-    loop as the reference implementation),
+    loop as the reference implementation).  ``resident=True`` switches
+    from host-staged operand round-trips to the *resident-register*
+    executor (:class:`_ResidentRun`): SSA registers live in physical rows
+    of the subarray pair and chain between instructions via RowClone —
+    the in-bank discipline the paper's Section 7 cost argument assumes,
   * ``repro.pud.engine.PudEngine.run_program`` — packed bit-plane
     execution on the jnp / Pallas / chunk-batched-DRAM backends with
-    per-instruction offload metering.
+    per-instruction offload metering (``PudEngine(resident=True)`` routes
+    the dram backend through the resident executor).
 """
 from __future__ import annotations
 
@@ -225,16 +230,24 @@ def run_ideal(prog: Program, inputs: dict[str, np.ndarray],
     """Exact numpy reference semantics.
 
     Inputs may carry a leading trial axis ``(T, width)`` — pass ``width``
-    explicitly then; consts broadcast and outputs keep the trial axis.
+    explicitly then; consts broadcast and outputs keep the trial axis
+    (*including* const-only outputs: const registers materialize at the
+    full ``(T, width)`` trial shape, so every output has the same shape).
     """
+    arrs = {k: np.asarray(v) for k, v in inputs.items()}
     if width is None:
-        width = np.asarray(next(iter(inputs.values()))).shape[-1]
+        width = next(iter(arrs.values())).shape[-1]
+    lead: tuple[int, ...] = ()
+    for v in arrs.values():
+        if v.ndim > 1:
+            lead = np.broadcast_shapes(lead, v.shape[:-1])
     regs: dict[int, np.ndarray] = {}
     for i in prog.instrs:
         if i.op == "input":
-            regs[i.dst] = np.asarray(inputs[i.name], dtype=np.uint8)
+            regs[i.dst] = np.asarray(arrs[i.name], dtype=np.uint8)
         elif i.op == "const":
-            regs[i.dst] = np.full(width, int(i.value), dtype=np.uint8)
+            regs[i.dst] = np.full(lead + (width,), int(i.value),
+                                  dtype=np.uint8)
         elif i.op == "not":
             regs[i.dst] = 1 - regs[i.srcs[0]]
         elif i.op in ("and", "nand"):
@@ -267,7 +280,10 @@ def _run_sim_once(prog: Program, inputs: dict[str, np.ndarray],
                     f"input {i.name}: want shape in {want}, got {v.shape}")
             regs[i.dst] = v
         elif i.op == "const":
-            regs[i.dst] = np.full(width, int(i.value), dtype=np.uint8)
+            # materialize at the sim's full trial shape: a const-only
+            # output must come back (T, width) like every computed output
+            shape = (width,) if t is None else (t, width)
+            regs[i.dst] = np.full(shape, int(i.value), dtype=np.uint8)
         elif i.op == "not":
             if recycle:
                 isa.sim.recycle_rows()
@@ -281,9 +297,247 @@ def _run_sim_once(prog: Program, inputs: dict[str, np.ndarray],
     return {k: regs[r] for k, r in prog.outputs.items()}
 
 
+# ---------------------------------------------------------------------------
+# Resident-register execution (RowClone chaining)
+# ---------------------------------------------------------------------------
+class _ResidentRun:
+    """One resident-register pass of a Program over a PudIsa.
+
+    Data-movement algebra of an open-bitline subarray pair (f = reference
+    side, l = compute side):
+
+    * RowClone moves a value *within* a side (no bus traffic),
+    * the NOT protocol moves f -> l, **complementing**,
+    * a Boolean APA consumes l-side operand rows and leaves the base
+      AND/OR result on the l side plus its complement on the f side.
+
+    There is no same-value f -> l move, so the executor tracks, per SSA
+    register, the physical row holding its *value* and the row holding its
+    *complement*.  When an instruction's operands only have complements on
+    the compute side it rewrites through De Morgan onto the dual op
+    (``and(xs) == nor(~xs)``; the result then materializes on the f side)
+    instead of spilling.  Registers whose needed polarity is resident are
+    staged by RowClone; everything else falls back to an honest host
+    round-trip (RD + WR over the bus) — program inputs and consts are
+    host-known, so they stage with a WR and never need the RD.
+
+    Row slots: SSA liveness (last-use indices) frees register rows; rows
+    about to be clobbered by the next activation pattern are relocated via
+    RowClone first (the allocator's spill path).  Reference constants live
+    in cached in-bank rows and are RowCloned — not host-written — into
+    each op's reference block.
+    """
+
+    def __init__(self, prog: Program, inputs: dict[str, np.ndarray],
+                 isa: PudIsa):
+        self.prog, self.isa, self.sim = prog, isa, isa.sim
+        self.width, self.t = isa.width, isa.trials
+        want = (((self.width,),) if self.t is None
+                else ((self.width,), (self.t, self.width)))
+        self.inputs = {}
+        for i in prog.instrs:
+            if i.op != "input":
+                continue
+            v = np.asarray(inputs[i.name], dtype=np.uint8)
+            if v.shape not in want:
+                raise ValueError(
+                    f"input {i.name}: want shape in {want}, got {v.shape}")
+            self.inputs[i.name] = v
+        #: digital words the host knows exactly (inputs, consts, spills)
+        self.host: dict[int, np.ndarray] = {}
+        #: reg -> (side, row) of the row holding the value / the complement
+        self.val: dict[int, tuple[str, int]] = {}
+        self.neg: dict[int, tuple[str, int]] = {}
+        #: per-side row ownership: row -> ("val"|"neg", reg) | ("const", v)
+        self.owned: dict[str, dict[int, tuple]] = {"f": {}, "l": {}}
+        self.consts: dict[tuple[str, int], int] = {}
+        self.last_use: dict[int, int] = {}
+        self.uses_left: dict[int, int] = {}
+        for idx, ins in enumerate(prog.instrs):
+            for s in ins.srcs:
+                self.last_use[s] = idx
+                self.uses_left[s] = self.uses_left.get(s, 0) + 1
+        for r in prog.outputs.values():
+            self.last_use[r] = len(prog.instrs)
+
+    # ---------------- row bookkeeping ----------------
+    def _sub(self, side: str) -> int:
+        return self.isa.f_sub if side == "f" else self.isa.l_sub
+
+    def _alloc(self, side: str, exclude) -> int:
+        owned = self.owned[side]
+        for r in range(self.sim.geom.rows_per_subarray):
+            if r not in owned and r not in exclude:
+                return r
+        raise RuntimeError("subarray out of resident-register rows")
+
+    def _claim(self, side: str, row: int, tag: tuple) -> None:
+        kind, ref = tag
+        if kind in ("val", "neg"):
+            m = self.val if kind == "val" else self.neg
+            old = m.get(ref)
+            if old is not None and old != (side, row):
+                self.owned[old[0]].pop(old[1], None)   # re-homed: free it
+            m[ref] = (side, row)
+        else:
+            self.consts[(side, ref)] = row
+        self.owned[side][row] = tag
+
+    def _relocate(self, act) -> None:
+        """RowClone live rows out of the way of the next activation."""
+        for side, rows in (("f", act.rows_f), ("l", act.rows_l)):
+            rows = {int(r) for r in rows}
+            owned = self.owned[side]
+            for r in sorted(rows & set(owned)):
+                tag = owned.pop(r)
+                new = self._alloc(side, rows)
+                self.isa.clone_word(self._sub(side), r, new)
+                self._claim(side, new, tag)
+
+    def _release(self, reg: int) -> None:
+        for m in (self.val, self.neg):
+            loc = m.pop(reg, None)
+            if loc is not None:
+                self.owned[loc[0]].pop(loc[1], None)
+
+    def _const_row(self, side: str, v: int, exclude) -> int:
+        if (side, v) in self.consts:
+            return self.consts[(side, v)]
+        row = self._alloc(side, exclude)
+        self.isa.fill_const_row(self._sub(side), row, v)
+        self._claim(side, row, ("const", v))
+        return row
+
+    def _spill(self, reg: int) -> np.ndarray:
+        """Round-trip a resident register through the host (one RD)."""
+        if reg in self.host:
+            return self.host[reg]
+        if reg in self.val:
+            side, row = self.val[reg]
+            bits = self.isa.read_result_word(self._sub(side), row)
+        else:
+            side, row = self.neg[reg]
+            bits = 1 - self.isa.read_result_word(self._sub(side), row)
+        self.host[reg] = bits.astype(np.uint8)
+        return self.host[reg]
+
+    # ---------------- instruction execution ----------------
+    def _stage_sources(self, srcs, demorgan: bool, excl_l) -> list:
+        """Per-operand staging specs for :meth:`PudIsa.exec_nary`."""
+        sources = []
+        for s in srcs:
+            res = self.neg.get(s) if demorgan else self.val.get(s)
+            self.uses_left[s] = self.uses_left.get(s, 1) - 1
+            if res is not None and res[0] == "l":
+                sources.append(("clone", res[1]))
+                continue
+            bits = self._spill(s)
+            if demorgan:
+                bits = (1 - bits).astype(np.uint8)
+            if self.uses_left.get(s, 0) > 0:
+                # multi-use host word: park it in a register-file row once
+                # and RowClone per use instead of re-writing every time
+                row = self._alloc("l", excl_l)
+                self.isa.stage_word(self.isa.l_sub, row, bits)
+                self._claim("l", row, ("neg" if demorgan else "val", s))
+                sources.append(("clone", row))
+            else:
+                sources.append(("write", bits))
+        return sources
+
+    def _exec_bool(self, i: Instr) -> None:
+        srcs = list(i.srcs)
+        base = "and" if i.op in ("and", "nand") else "or"
+        miss_direct = sum(1 for s in srcs
+                          if s not in self.host
+                          and self.val.get(s, ("?",))[0] != "l")
+        miss_dem = sum(1 for s in srcs
+                       if s not in self.host
+                       and self.neg.get(s, ("?",))[0] != "l")
+        demorgan = miss_dem < miss_direct
+        exec_base = ("or" if base == "and" else "and") if demorgan else base
+        n_hw, rf, rl, act = self.isa.plan_nary(exec_base, len(srcs))
+        self._relocate(act)
+        excl_f = {int(r) for r in act.rows_f}
+        excl_l = {int(r) for r in act.rows_l}
+        ref_row = self._const_row("f", 1 if exec_base == "and" else 0,
+                                  excl_f)
+        sources = self._stage_sources(srcs, demorgan, excl_l)
+        ident = 1 if exec_base == "and" else 0
+        for _ in range(n_hw - len(srcs)):
+            sources.append(("clone", self._const_row("l", ident, excl_l)))
+        res_l, res_f = self.isa.exec_nary(exec_base, rf, rl, act, sources,
+                                          ref_row=ref_row)
+        # the APA leaves exec_base(staged operands) on the l side and its
+        # complement on the f side; map them back onto i.dst's polarity
+        val_on_l = (i.op in ("nand", "nor")) == demorgan
+        self._claim("l", res_l, ("val" if val_on_l else "neg", i.dst))
+        self._claim("f", res_f, ("neg" if val_on_l else "val", i.dst))
+
+    def _exec_not(self, i: Instr) -> None:
+        x = i.srcs[0]
+        if self.val.get(x, ("?",))[0] == "l":
+            # no same-value f->l move exists: complement on the compute
+            # side via the self-NAND (the result lands on the f side)
+            self._exec_bool(Instr("nand", i.dst, (x, x)))
+            return
+        self.uses_left[x] = self.uses_left.get(x, 1) - 1
+        rf, rl, act = self.isa.plan_not(1)
+        self._relocate(act)
+        if self.val.get(x, ("?",))[0] == "f":
+            source = ("clone", self.val[x][1])
+        else:
+            source = ("write", self._spill(x))
+        res_l, src_f = self.isa.exec_not(rf, rl, act, source)
+        # dst = ~x lands on the l side; the restored source rows hold x,
+        # i.e. dst's complement, on the f side
+        self._claim("l", res_l, ("val", i.dst))
+        self._claim("f", src_f, ("neg", i.dst))
+
+    # ---------------- driver ----------------
+    def run(self) -> dict[str, np.ndarray]:
+        for idx, i in enumerate(self.prog.instrs):
+            if i.op == "input":
+                self.host[i.dst] = self.inputs[i.name]
+            elif i.op == "const":
+                self.host[i.dst] = np.full(self.width, int(i.value),
+                                           dtype=np.uint8)
+            elif i.op == "not":
+                self._exec_not(i)
+            elif i.op in ("and", "or", "nand", "nor"):
+                self._exec_bool(i)
+            else:
+                raise ValueError(i.op)
+            for s in set(i.srcs):
+                if self.last_use.get(s) == idx:
+                    self._release(s)
+        out: dict[str, np.ndarray] = {}
+        for name, r in self.prog.outputs.items():
+            if r in self.host:
+                bits = self.host[r]
+            elif r in self.val:
+                side, row = self.val[r]
+                bits = self.isa.read_result_word(self._sub(side), row)
+            else:
+                side, row = self.neg[r]
+                bits = (1 - self.isa.read_result_word(self._sub(side), row))
+            bits = np.asarray(bits, dtype=np.uint8)
+            if self.t is not None and bits.ndim == 1:
+                bits = np.broadcast_to(bits, (self.t, self.width)).copy()
+            out[name] = bits
+        return out
+
+
+def _run_sim_resident(prog: Program, inputs: dict[str, np.ndarray],
+                      isa: PudIsa) -> dict[str, np.ndarray]:
+    """Resident-register pass: intermediates chain in-bank via RowClone."""
+    return _ResidentRun(prog, inputs, isa).run()
+
+
 def run_sim(prog: Program, inputs: dict[str, np.ndarray], isa: PudIsa, *,
             trials: int | None = None, batched: bool = True,
-            recycle: bool | None = None) -> dict[str, np.ndarray]:
+            recycle: bool | None = None,
+            resident: bool = False) -> dict[str, np.ndarray]:
     """Execute on the (noisy) DRAM simulator through the ISA.
 
     Trial batching: on a ``PudIsa`` over ``BankSim(trials=T)`` the whole
@@ -307,10 +561,27 @@ def run_sim(prog: Program, inputs: dict[str, np.ndarray], isa: PudIsa, *,
     ops re-stage every row they read) so the hot working set stays one
     op's rows instead of growing with the program; defaults to True on
     trial-batched sims, False on scalar sims (seed-compatible behavior).
+
+    ``resident=True`` — the resident-register executor: intermediates stay
+    *in the bank* across instructions (see :class:`_ResidentRun`), staged
+    between ops by RowClone instead of host write-backs; only program
+    inputs, reference-constant rows and the rare polarity spill cross the
+    bus, and only program *outputs* are read back.  Requires the batched
+    executor semantics (works on scalar and trial-batched sims alike) and
+    manages physical rows itself, so ``recycle`` is ignored.
     """
     t_sim = isa.trials
     if recycle is None:
         recycle = t_sim is not None
+    if resident:
+        if not batched:
+            raise ValueError("resident=True requires the batched executor "
+                             "(the per-trial reference path is host-staged)")
+        if trials is not None and trials != (1 if t_sim is None else t_sim):
+            raise ValueError(
+                f"trials={trials} but the ISA's sim runs "
+                f"{t_sim or 1} trials; build BankSim(trials={trials})")
+        return _run_sim_resident(prog, inputs, isa)
     if batched:
         if trials is not None and trials != (1 if t_sim is None else t_sim):
             raise ValueError(

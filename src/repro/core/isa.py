@@ -274,9 +274,45 @@ class PudIsa:
         return full[..., cols]
 
     def _result_word(self, sub: int, row: int, side: str) -> np.ndarray:
-        """Digital result word of one physical row: (w,), or (T, w) batched."""
+        """Digital result word of one physical row: (w,), or (T, w) batched.
+
+        Counted as a host readout (RD over the bus): the staged executor
+        pays it per instruction, the resident executor only per program
+        output / spill."""
         sl = self._f_sl if side == "f" else self._l_sl
+        self.stats.reads += 1
+        self.stats.cost = self.stats.cost + self.cost_model.read_row()
         return self.sim.read_shared_word(sub, row, sl)
+
+    def read_result_word(self, sub: int, row: int) -> np.ndarray:
+        """Public result readout for row handles (resident executor)."""
+        side = "f" if sub == self.f_sub else "l"
+        return self._result_word(sub, row, side)
+
+    def clone_word(self, sub: int, src: int, dst: int) -> None:
+        """In-bank RowClone of one row (the resident executor's data-move
+        primitive): no bus traffic, 2 ACTs.  A no-op when src == dst."""
+        if src == dst:
+            return
+        self.sim.rowclone(sub, src, dst)
+        self.stats.rowclones += 1
+        self.stats.cost = self.stats.cost + self.cost_model.rowclone()
+
+    def fill_const_row(self, sub: int, row: int, value: int) -> None:
+        """Host-write one all-``value`` row (resident const-row staging)."""
+        cols = self._f_sl if sub == self.f_sub else self._l_sl
+        self.sim.fill_rows(sub, [row], float(value), cols=cols)
+        self.stats.writes += 1
+        self.stats.cost = self.stats.cost + self.cost_model.write_row()
+
+    def stage_word(self, sub: int, row: int, bits) -> None:
+        """Host-write one word into one row (resident register staging)."""
+        cols = self._f_sl if sub == self.f_sub else self._l_sl
+        self.sim.write_cols_multi(sub, [row], cols,
+                                  np.asarray(bits,
+                                             dtype=np.float32)[..., None, :])
+        self.stats.writes += 1
+        self.stats.cost = self.stats.cost + self.cost_model.write_row()
 
     def write_word(self, sub: int, row: int, bits: np.ndarray) -> None:
         side = "f" if sub == self.f_sub else "l"
@@ -309,15 +345,9 @@ class PudIsa:
                 return n_rf
         raise CapabilityError(f"no activation with {n_dst} dst rows")
 
-    def op_not(self, bits: np.ndarray, *, n_dst: int = 1,
-               pair_index: int | None = None,
-               pair: tuple[int, int] | None = None) -> np.ndarray:
-        """In-DRAM NOT: returns the (noisy) complement of ``bits``.
-
-        ``bits`` is (w,) or, on a batched sim, (T, w) for per-trial inputs.
-        ``pair`` pins the exact (R_F, R_L) rows (stratified row sweeps);
-        ``pair_index`` picks from the inventory; default iterates scrambled.
-        """
+    def plan_not(self, n_dst: int = 1, *, pair_index: int | None = None,
+                 pair: tuple[int, int] | None = None):
+        """Pair selection for a NOT: -> (rf, rl, activation)."""
         n_rf = self.not_activation(n_dst)
         if pair is not None:
             rf, rl = pair
@@ -340,18 +370,141 @@ class PudIsa:
             raise CapabilityError(
                 f"address pair ({rf}, {rl}) yields no simultaneous "
                 f"activation on {self.sim.module.name}")
-        # stage source bits into every activated R_F row (they charge-share)
-        self.sim.write_cols_multi(self.f_sub, act.rows_f, self._f_sl,
-                                  np.asarray(bits, dtype=np.float32)[..., None, :])
-        self.stats.writes += act.n_rf
+        return rf, rl, act
+
+    def exec_not(self, rf: int, rl: int, act: DEC.Activation,
+                 source) -> tuple[int, int]:
+        """NOT with an explicit source: ``("write", bits)`` host-stages the
+        word into every activated R_F row; ``("clone", f_row)`` RowClones a
+        resident R_F-side row instead (no bus traffic).  Returns the
+        (result l-row, restored-source f-row) handles; the result row holds
+        the complement, the f rows the restored source."""
+        kind, payload = source
+        if kind == "clone":
+            for r in act.rows_f:
+                self.clone_word(self.f_sub, int(payload), int(r))
+        else:
+            self.sim.write_cols_multi(
+                self.f_sub, act.rows_f, self._f_sl,
+                np.asarray(payload, dtype=np.float32)[..., None, :])
+            self.stats.writes += act.n_rf
+            self.stats.cost = self.stats.cost \
+                + self.cost_model.write_row().scaled(act.n_rf)
         self.sim.apa(self.sim.global_addr(self.f_sub, rf),
                      self.sim.global_addr(self.l_sub, rl),
                      first_act_restored=True)
         self.stats.apas += 1
         self.stats.ops += 1
-        self.stats.cost = self.stats.cost + self.cost_model.op_not(n_dst) \
-            + self.cost_model.write_row().scaled(act.n_rf)
-        return self._result_word(self.l_sub, act.rows_l[0], "l")
+        self.stats.cost = self.stats.cost + self.cost_model.op_not(act.n_rl)
+        return int(act.rows_l[0]), int(act.rows_f[0])
+
+    def op_not(self, bits: np.ndarray, *, n_dst: int = 1,
+               pair_index: int | None = None,
+               pair: tuple[int, int] | None = None) -> np.ndarray:
+        """In-DRAM NOT: returns the (noisy) complement of ``bits``.
+
+        ``bits`` is (w,) or, on a batched sim, (T, w) for per-trial inputs.
+        ``pair`` pins the exact (R_F, R_L) rows (stratified row sweeps);
+        ``pair_index`` picks from the inventory; default iterates scrambled.
+        """
+        rf, rl, act = self.plan_not(n_dst, pair_index=pair_index, pair=pair)
+        res_row, _src_row = self.exec_not(rf, rl, act, ("write", bits))
+        return self._result_word(self.l_sub, res_row, "l")
+
+    def plan_nary(self, op: str, n: int, *, pair_index: int | None = None,
+                  pair: tuple[int, int] | None = None):
+        """Capability checks + pair selection for an n-ary Boolean op.
+
+        -> (n_hw, rf, rl, activation): the decoder only expresses
+        power-of-two N:N activations, so ``n_hw >= n`` is the hardware
+        fan-in (the caller pads with identity operands up to it)."""
+        op = op.lower()
+        if op not in ALL_OPS:
+            raise ValueError(f"unknown op {op}")
+        if n < 2:
+            raise ValueError("n-ary op needs >= 2 operands")
+        if n > self.sim.module.max_inputs:
+            raise CapabilityError(
+                f"{n}-input ops exceed module capability "
+                f"({self.sim.module.max_inputs})")
+        n_hw = n
+        while n_hw <= 16 and len(self.inv.pairs(n_hw, n_hw)) == 0:
+            n_hw += n_hw % 2 or 1   # next even, then doubles via pairs check
+        if len(self.inv.pairs(n_hw, n_hw)) == 0:
+            raise CapabilityError(f"no >= {n}:{n} pairs on this module")
+        if pair is not None:
+            rf, rl = pair
+        elif pair_index is not None:
+            rf, rl = self.inv.choose(n_hw, n_hw, pair_index)
+        else:
+            rf, rl = self._next_pair(n_hw, n_hw)
+        act = DEC.activation_pattern(self.sim.module, rf, rl,
+                                     seed=self.sim.seed)
+        assert act.n_rf == n_hw and act.n_rl == n_hw
+        return n_hw, rf, rl, act
+
+    def exec_nary(self, op: str, rf: int, rl: int, act: DEC.Activation,
+                  sources, *, ref_row: int | None = None,
+                  random_pattern: bool = True) -> tuple[int, int]:
+        """N-ary Boolean APA with per-operand staging sources.
+
+        ``sources`` is one entry per activated compute row:
+        ``("write", bits)`` host-writes the word, ``("clone", l_row)``
+        RowClones a resident row (no bus traffic).  Alternatively the
+        whole compute block stages in one zero-copy strided scatter by
+        passing ``("write_stack", operands)`` — operands as accepted by
+        :meth:`_stack_words` (the staged executor's hot path).  The
+        reference block is host-filled when ``ref_row`` is None, else
+        RowCloned from that resident constant row.  Returns (compute
+        l-row, reference f-row) handles: after the APA the l row holds
+        the base AND/OR result and the f row its complement (NAND/NOR).
+        """
+        n = act.n_rf
+        base, _is_ref = _base_op(op.lower())
+        # reference block: N-1 constants + one Frac row (§6.1.2)
+        if ref_row is None:
+            const = 1.0 if base == "and" else 0.0
+            self.sim.fill_rows(self.f_sub, act.rows_f[:-1], const,
+                               cols=self._f_sl)
+            self.stats.writes += n - 1
+            # keep stats.cost consistent with the WR commands just issued
+            # (clone_word charges the resident path's ref staging likewise)
+            self.stats.cost = self.stats.cost \
+                + self.cost_model.write_row().scaled(n - 1)
+        else:
+            for r in act.rows_f[:-1]:
+                self.clone_word(self.f_sub, int(ref_row), int(r))
+        self.sim.frac_row(self.f_sub, act.rows_f[-1])
+        self.stats.fracs += 1
+        # compute block: clones in place, host words in one strided scatter
+        if isinstance(sources, tuple) and sources[0] == "write_stack":
+            stack = self._stack_words(sources[1])
+            n_wr = stack.shape[-2]
+            self.sim.write_cols_multi(self.l_sub, act.rows_l[:n_wr],
+                                      self._l_sl, stack)
+            self.stats.writes += n_wr
+        else:
+            wr_rows, wr_bits = [], []
+            for i, (kind, payload) in enumerate(sources):
+                if kind == "clone":
+                    self.clone_word(self.l_sub, int(payload),
+                                    int(act.rows_l[i]))
+                else:
+                    wr_rows.append(int(act.rows_l[i]))
+                    wr_bits.append(payload)
+            if wr_rows:
+                self.sim.write_cols_multi(self.l_sub, wr_rows, self._l_sl,
+                                          self._stack_words(wr_bits))
+                self.stats.writes += len(wr_rows)
+            n_wr = len(wr_rows)
+        self.sim.op_boolean(op, self.sim.global_addr(self.f_sub, rf),
+                            self.sim.global_addr(self.l_sub, rl),
+                            random_pattern=random_pattern)
+        self.stats.apas += 1
+        self.stats.ops += 1
+        self.stats.cost = self.stats.cost + self.cost_model.boolean(n) \
+            + self.cost_model.write_row().scaled(n_wr)
+        return int(act.rows_l[0]), int(act.rows_f[0])
 
     def nary_op(self, op: str, operands: list[np.ndarray], *,
                 pair_index: int | None = None,
@@ -365,57 +518,20 @@ class PudIsa:
         padded with identity operands (all-1 rows for AND, all-0 for OR) up
         to the next supported N.
         """
-        op = op.lower()
-        if op not in ALL_OPS:
-            raise ValueError(f"unknown op {op}")
         n = len(operands)
-        if n < 2:
-            raise ValueError("n-ary op needs >= 2 operands")
-        if n > self.sim.module.max_inputs:
-            raise CapabilityError(
-                f"{n}-input ops exceed module capability "
-                f"({self.sim.module.max_inputs})")
-        base, is_ref = _base_op(op)
-        n_hw = n
-        while n_hw <= 16 and len(self.inv.pairs(n_hw, n_hw)) == 0:
-            n_hw += n_hw % 2 or 1   # next even, then doubles via pairs check
-        if len(self.inv.pairs(n_hw, n_hw)) == 0:
-            raise CapabilityError(f"no >= {n}:{n} pairs on this module")
+        n_hw, rf, rl, act = self.plan_nary(op, n, pair_index=pair_index,
+                                           pair=pair)
+        base, is_ref = _base_op(op.lower())
         if n_hw != n:
             ident = np.full(self.width, 1 if base == "and" else 0,
                             dtype=np.uint8)
             operands = list(operands) + [ident] * (n_hw - n)
-            n = n_hw
-        if pair is not None:
-            rf, rl = pair
-        elif pair_index is not None:
-            rf, rl = self.inv.choose(n, n, pair_index)
-        else:
-            rf, rl = self._next_pair(n, n)
-        act = DEC.activation_pattern(self.sim.module, rf, rl,
-                                     seed=self.sim.seed)
-        assert act.n_rf == n and act.n_rl == n
-        # reference block: N-1 constants + one Frac row (§6.1.2)
-        const = 1.0 if base == "and" else 0.0
-        self.sim.fill_rows(self.f_sub, act.rows_f[:-1], const,
-                           cols=self._f_sl)
-        self.stats.writes += act.n_rf - 1
-        self.sim.frac_row(self.f_sub, act.rows_f[-1])
-        self.stats.fracs += 1
-        # compute block: operands (one strided scatter for all rows)
-        stack = self._stack_words(operands)
-        self.sim.write_cols_multi(self.l_sub, act.rows_l[:len(operands)],
-                                  self._l_sl, stack)
-        self.stats.writes += len(operands)
-        self.sim.op_boolean(op, self.sim.global_addr(self.f_sub, rf),
-                            self.sim.global_addr(self.l_sub, rl),
-                            random_pattern=random_pattern)
-        self.stats.apas += 1
-        self.stats.ops += 1
-        self.stats.cost = self.stats.cost + self.cost_model.boolean(n)
+        res_l, res_f = self.exec_nary(op, rf, rl, act,
+                                      ("write_stack", operands),
+                                      random_pattern=random_pattern)
         if is_ref:   # NAND/NOR lands in the reference subarray rows
-            return self._result_word(self.f_sub, act.rows_f[0], "f")
-        return self._result_word(self.l_sub, act.rows_l[0], "l")
+            return self._result_word(self.f_sub, res_f, "f")
+        return self._result_word(self.l_sub, res_l, "l")
 
     # composite ops (functional completeness in action) ------------------
     def op_xor(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:

@@ -81,15 +81,18 @@ def plan(op: str, n: int, target: float, *, max_replicas: int = 9,
     rc, rr, p_raw = best_regions(op, n, p=p, **kw)
     p_vote = A.boolean_success_avg("and", 2, p=p, compute_region=rc,
                                    ref_region=rr, **kw)
+    r, pf, ops = 1, p_raw, 1
     for r in range(1, max_replicas + 1, 2):
         pf = (vote_success_with_noisy_vote(p_raw, r, p_vote)
               if (noisy_vote and r > 1) else vote_success(p_raw, r))
         ops = r + (0 if r == 1 else 4 * (r // 2))   # MAJ3 cascade
         if pf >= target:
             return RedundancyPlan(op, n, r, rc, rr, p_raw, pf, ops)
-    return RedundancyPlan(op, n, max_replicas, rc, rr, p_raw,
-                          vote_success(p_raw, max_replicas),
-                          max_replicas + 4 * (max_replicas // 2))
+    # unreachable target: fall back to the largest candidate *as evaluated
+    # in the loop* — with noisy_vote=True the old fallback used the ideal
+    # vote_success formula, overstating p_final relative to every
+    # candidate it had just rejected
+    return RedundancyPlan(op, n, r, rc, rr, p_raw, pf, ops)
 
 
 def cell_mask(success_map: np.ndarray, threshold: float = 0.999) -> np.ndarray:

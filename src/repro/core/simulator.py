@@ -89,6 +89,14 @@ from .device import (ActivationSupport, DRAMTimings, ModuleConfig,
 # fraction of the Gaussian sigma that is static (per-cell) vs per-trial
 STATIC_SPLIT = 0.8
 
+#: per-cell flip probability of one same-subarray RowClone under the analog
+#: error model.  RowClone's sequential ACT -> PRE -> ACT fully restores the
+#: source before the destination ACT, so the copy is near-deterministic on
+#: real chips (RowClone [51]; PULSAR reports no in-subarray copy errors) —
+#: but it is not *exactly* free, and resident-register execution chains many
+#: of them, so the simulator models a small independent failure floor.
+ROWCLONE_FAIL_P = 2e-6
+
 
 def _norm_ppf(q):
     """Acklam's inverse normal CDF approximation (max abs err ~1.15e-9)."""
@@ -150,7 +158,8 @@ class BankSim:
                  params: AnalogParams | None = None, temp_c: float = 50.0,
                  error_model: str = "analog", trials: int | None = None,
                  track_unshared: bool = True, noise_seed: int | None = None,
-                 resolve_backend: str = "auto"):
+                 resolve_backend: str = "auto",
+                 rowclone_fail_p: float = ROWCLONE_FAIL_P):
         self.module = (get_module(module) if isinstance(module, str)
                        else module or get_module())
         geom = self.module.geometry
@@ -169,6 +178,8 @@ class BankSim:
         if resolve_backend not in ("auto", "numpy", "pallas"):
             raise ValueError(f"unknown resolve backend {resolve_backend!r}")
         self.resolve_backend = resolve_backend
+        #: per-cell RowClone flip probability (analog error model only)
+        self.rowclone_fail_p = float(rowclone_fail_p)
         if trials is not None and trials < 1:
             raise ValueError(f"trials must be >= 1, got {trials}")
         #: None = legacy scalar API (rows are 1-D); int T = batched trials
@@ -400,18 +411,35 @@ class BankSim:
 
     def frac_row(self, sub: int, row: int) -> None:
         """FracDRAM: store VDD/2 in every cell of the row."""
-        self._cells(sub)[:, self._row(sub, row)] = 0.5
+        # map the row *before* grabbing the buffer: a first touch can grow
+        # (reallocate) the slot buffer, and the old one must not be indexed
+        i = self._row(sub, row)
+        self._cells(sub)[:, i] = 0.5
         t = self.timings
         # Frac = ACT -> PRE with violated tRAS, twice (per FracDRAM)
         self.log.add("FRAC", 2 * (VIOLATED_TRAS_NS + t.tRP),
                      2 * (ENERGY_PJ["act"] + ENERGY_PJ["pre"]))
 
     def rowclone(self, sub: int, src: int, dst: int) -> None:
-        """Same-subarray RowClone (sequential ACT -> PRE -> ACT)."""
+        """Same-subarray RowClone (sequential ACT -> PRE -> ACT).
+
+        Trial-batched like every other command (the copy broadcasts over
+        the leading trial axis).  Under the analog error model the copy is
+        *noisy*: each destination cell independently flips with probability
+        ``rowclone_fail_p`` (the source, fully restored by the first ACT,
+        is unaffected) — the resident-register executor chains many clones,
+        so the floor is modeled rather than assumed away.
+        """
         isrc, idst = self._map_rows(sub, [src, dst])
         arr = self._cells(sub)
         restored = (arr[:, isrc] > 0.5).astype(np.float32)
-        arr[:, idst] = restored
+        copied = restored
+        if self.error_model == "analog" and self.rowclone_fail_p > 0.0:
+            rng = self._rng()
+            flip = rng.random(restored.shape,
+                              dtype=self._noise_dtype) < self.rowclone_fail_p
+            copied = np.where(flip, 1.0 - restored, restored)
+        arr[:, idst] = copied
         arr[:, isrc] = restored  # source restored
         t = self.timings
         self.log.add("RC", t.tRAS + VIOLATED_TRP_NS + t.tRAS + t.tRP,
@@ -706,8 +734,14 @@ class BankSim:
 
     def read_shared_word(self, sub: int, row: int, sl: slice) -> np.ndarray:
         """Digital value of one shared-column half of a row, in j order —
-        the ISA's result readout ((w,), or (T, w) batched)."""
+        the ISA's result readout ((w,), or (T, w) batched).  Logged as a
+        full RD: the host pulls the row over the DDR bus to get the word."""
         i = self._row(sub, row)
+        t = self.timings
+        n_bursts = self.geom.row_bits // 512
+        self.log.add("RD", t.tRCD + t.tCL + t.tRP,
+                     ENERGY_PJ["act"] + ENERGY_PJ["pre"]
+                     + n_bursts * ENERGY_PJ["rd_per_64B"])
         return self._out((self._cells(sub)[:, i, sl] > 0.5).astype(np.uint8))
 
     def snapshot_rows(self, sub: int, rows) -> np.ndarray:

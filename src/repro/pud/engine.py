@@ -32,6 +32,15 @@ any backend through :meth:`PudEngine.run_program`: jnp / Pallas run each
 instruction on whole packed planes; dram runs the trial-batched program
 executor (``compiler.run_sim``) per chunk block.  ``add`` routes in-DRAM
 arithmetic the same way.
+
+``PudEngine("dram", resident=True)`` switches program execution to the
+*resident-register* executor: intermediates chain in-bank via RowClone
+instead of round-tripping through the host between instructions, so the
+``OffloadReport`` books RowClones (``report.rowclones``) in place of most
+host staging writes (``report.staged_bytes``) — the host-staged path stays
+the default reference.  On the dram backend the report's dram-side cost is
+*measured* from the simulator's command log rather than modeled, so both
+modes are compared on the commands they actually issued.
 """
 from __future__ import annotations
 
@@ -43,7 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import compiler as CC
-from ..core.device import get_module
+from ..core.device import ENERGY_PJ, get_module
 from ..core.isa import CostModel, OpCost, PudIsa
 from ..core.simulator import BankSim
 from ..kernels import ops as kops
@@ -59,12 +68,28 @@ def _adder_program(k: int) -> CC.Program:
 
 @dataclass
 class OffloadReport:
-    """Accumulated in-DRAM vs CPU-baseline cost of engine traffic."""
+    """Accumulated in-DRAM vs CPU-baseline cost of engine traffic.
+
+    ``ops``/``bits`` count logical PuD instructions and the logical bits
+    each processed — backend-invariant by construction (every backend
+    meters the *synthesized native instruction stream*, so e.g. ``add``
+    books the same ops/bits on jnp, pallas and dram).  ``dram``/``cpu``
+    aggregate the modeled DDR4 command costs; on the dram backend the
+    dram side is *measured* from the simulator's command log instead of
+    modeled, so staging traffic (host WR/RD) shows up exactly as issued.
+    ``rowclones`` counts in-bank RowClone copies (resident-register
+    execution stages operands with these instead of host writes) and
+    ``staged_bytes`` the bytes the host pushed over the bus to stage
+    operand/reference rows — the resident executor's headline is cutting
+    ``staged_bytes`` while ``rowclones`` grows.
+    """
 
     ops: int = 0
     bits: int = 0
     dram: OpCost = field(default_factory=OpCost)
     cpu: OpCost = field(default_factory=OpCost)
+    rowclones: int = 0
+    staged_bytes: int = 0
 
     @property
     def energy_saving(self) -> float:
@@ -86,6 +111,8 @@ class OffloadReport:
             "cpu_energy_uj": self.cpu.energy_pj / 1e6,
             "energy_saving": self.energy_saving,
             "bus_bytes_avoided": self.bus_bytes_avoided,
+            "rowclones": self.rowclones,
+            "staged_bytes": self.staged_bytes,
         }
 
 
@@ -102,7 +129,7 @@ class PudEngine:
     DRAM_MIN_PAIR_SWEEP = 4
 
     def __init__(self, backend: str = "jnp", *, module: str | None = None,
-                 noisy: bool = False, seed: int = 0):
+                 noisy: bool = False, seed: int = 0, resident: bool = False):
         assert backend in BACKENDS, backend
         self.backend = backend
         self.module = get_module(module) if module else get_module()
@@ -110,6 +137,10 @@ class PudEngine:
         self.report = OffloadReport()
         self.noisy = noisy
         self.seed = seed
+        #: dram backend: run compiled programs through the resident-register
+        #: executor (intermediates chain in-bank via RowClone) instead of
+        #: the host-staged reference path
+        self.resident = resident
         self._isa: PudIsa | None = None
         self._batched_isa: dict[int, PudIsa] = {}
         #: per-block noise-stream derivation (chip identity stays ``seed``)
@@ -146,21 +177,71 @@ class PudEngine:
         return isa
 
     # ------------- accounting -------------
-    def _meter(self, op: str, n_inputs: int, n_bits: int) -> None:
+    def _meter(self, op: str, n_inputs: int, n_bits: int, *,
+               modeled: bool | None = None) -> None:
+        """Book one logical instruction: ops/bits + the CPU baseline on
+        every backend; the *modeled* in-DRAM command cost unless the call
+        executes on the simulator (dram backend), whose cost is measured
+        from the sim log instead — :meth:`_account_sim_log` — so staging
+        traffic is charged exactly as issued, not idealized away."""
         w = self.module.geometry.shared_bits
         rows = max(1, -(-n_bits // w))      # DRAM rows touched per operand
         self.report.ops += 1
         self.report.bits += n_bits
+        n = 1 if op == "not" else max(n_inputs, 2)
+        self.report.cpu = self.report.cpu + self.cost_model.cpu_baseline(
+            n, rows)
+        if modeled is None:
+            modeled = self.backend != "dram"
+        if not modeled:
+            return
         if op == "not":
-            self.report.dram = self.report.dram \
-                + self.cost_model.op_not(1).scaled(rows)
-            self.report.cpu = self.report.cpu \
-                + self.cost_model.cpu_baseline(1, rows)
+            dram = self.cost_model.op_not(1)
         else:
-            self.report.dram = self.report.dram \
-                + self.cost_model.boolean(max(n_inputs, 2)).scaled(rows)
-            self.report.cpu = self.report.cpu \
-                + self.cost_model.cpu_baseline(max(n_inputs, 2), rows)
+            dram = self.cost_model.boolean(n)
+        self.report.dram = self.report.dram + dram.scaled(rows)
+
+    def _account_sim_log(self, sim: BankSim, before: tuple) -> None:
+        """Fold the sim's command-log delta since ``before`` into the
+        report's dram side: measured time/energy, host WR/RD bus bytes,
+        RowClone and staging counters.
+
+        The sim log books WR/RD at on-die (array access) cost; the
+        off-chip IO energy and burst transfer time that the modeled
+        CostModel and the CPU baseline include are added here per
+        transferred row, so measured and modeled report sides stay
+        comparable."""
+        t0, e0, c0 = before
+        log = sim.log
+        counts = {k: v - c0.get(k, 0) for k, v in log.counts.items()}
+        row_bytes = sim.geom.row_bits // 8
+        wr = counts.get("WR", 0)
+        rd = counts.get("RD", 0)
+        n_bursts = max(row_bytes // 64, 1)
+        io_rows = wr + rd
+        self.report.dram = self.report.dram + OpCost(
+            (log.time_ns - t0)
+            + io_rows * n_bursts * 4 * self.cost_model.t.tCK,
+            (log.energy_pj - e0)
+            + io_rows * n_bursts * ENERGY_PJ["io_per_64B"],
+            commands=sum(counts.values()),
+            bus_bytes=io_rows * row_bytes)
+        self.report.rowclones += counts.get("RC", 0)
+        self.report.staged_bytes += wr * row_bytes
+
+    @staticmethod
+    def _log_snapshot(sim: BankSim) -> tuple:
+        return (sim.log.time_ns, sim.log.energy_pj, dict(sim.log.counts))
+
+    def _meter_program(self, prog: CC.Program, n_bits: int) -> None:
+        """Meter a compiled program's native compute instructions — the
+        single definition both ``run_program`` and the fused-kernel ``add``
+        use, keeping ops/bits backend-invariant by construction."""
+        for i in prog.instrs:
+            if i.op == "not":
+                self._meter("not", 1, n_bits)
+            elif i.op in ("and", "or", "nand", "nor"):
+                self._meter(i.op, len(i.srcs), n_bits)
 
     # ------------- ops on packed planes -------------
     def nary(self, planes: jax.Array, op: str) -> jax.Array:
@@ -188,25 +269,28 @@ class PudEngine:
         jnp/pallas use the fused ripple-carry kernel; the dram backend
         synthesizes the adder from the paper's native op set
         (``compiler.adder_exprs``) and runs it through the trial-batched
-        program executor, metering each native instruction.
+        program executor.  *Every* backend meters the same synthesized
+        native instruction stream, so ``OffloadReport.ops``/``bits`` are
+        backend-invariant (the jnp/pallas kernels fuse the 12K ops into
+        one call, but the work they stand in for is identical).
         """
         k, r, c = a.shape
+        prog = _adder_program(k)
         if self.backend == "dram":
-            prog = _adder_program(k)
             planes = {f"a{i}": a[i] for i in range(k)} \
                 | {f"b{i}": b[i] for i in range(k)}
             out = self.run_program(prog, planes)
             return jnp.stack([out[f"s{i}"] for i in range(k)]
                              + [out["cout"]])
-        # 12 native ops per plane (compiler.adder_exprs)
-        self._meter("and", 2, 12 * k * r * c * 32)
+        self._meter_program(prog, r * c * 32)
         if self.backend == "pallas":
             return kops.add_planes(a, b)
         return kops.ref.add_planes(a, b)
 
     def popcount(self, planes: jax.Array) -> jax.Array:
         n = planes.shape[0]
-        self._meter("and", n, planes.size * 32)
+        # no simulator path: always the modeled in-DRAM equivalent cost
+        self._meter("and", n, planes.size * 32, modeled=True)
         if self.backend == "pallas":
             return kops.bitcount_planes(planes)
         return kops.ref.bitcount_planes(planes)
@@ -237,12 +321,7 @@ class PudEngine:
             raise ValueError(   # inflate the offload report
                 f"program inputs missing from planes: {sorted(missing)}")
         r, c = shape
-        n_bits = r * c * 32
-        for i in prog.instrs:
-            if i.op == "not":
-                self._meter("not", 1, n_bits)
-            elif i.op in ("and", "or", "nand", "nor"):
-                self._meter(i.op, len(i.srcs), n_bits)
+        self._meter_program(prog, r * c * 32)
         if self.backend == "dram":
             return self._dram_run_program(prog, named, shape)
         return self._planes_run_program(prog, named, shape)
@@ -271,7 +350,10 @@ class PudEngine:
     def _dram_run_program(self, prog: CC.Program, planes, shape):
         """Chunk-blocked program execution on the DRAM simulator: each
         block of row chunks runs the whole program as one trial-batched
-        ``compiler.run_sim`` episode."""
+        ``compiler.run_sim`` episode — host-staged by default, or through
+        the resident-register executor when the engine was built with
+        ``resident=True`` (intermediates then chain in-bank via RowClone
+        and only program outputs cross the bus)."""
         r, c = shape
         n_bits = r * c * 32
         w = self._isa.width
@@ -285,12 +367,15 @@ class PudEngine:
             blk = {name: ch[lo:lo + blk_sz] for name, ch in chunks.items()}
             t = next(iter(blk.values())).shape[0]
             isa = self._isa_for(t)
+            before = self._log_snapshot(isa.sim)
             if t == 1:
                 res = CC.run_sim(prog, {k: v[0] for k, v in blk.items()},
-                                 isa)
+                                 isa, resident=self.resident)
                 res = {k: v[None] for k, v in res.items()}
             else:
-                res = CC.run_sim(prog, blk, isa)     # (t, w) planes
+                res = CC.run_sim(prog, blk, isa,     # (t, w) planes
+                                 resident=self.resident)
+            self._account_sim_log(isa.sim, before)
             for name in pieces:
                 pieces[name].append(res[name])
         out = {}
@@ -330,10 +415,12 @@ class PudEngine:
         for lo in range(0, chunks.shape[1], blk_sz):
             blk = chunks[:, lo:lo + blk_sz]          # (n, C', w)
             isa = self._isa_for(blk.shape[1])
+            before = self._log_snapshot(isa.sim)
             if blk.shape[1] == 1:
                 res = isa.nary_op(op, list(blk[:, 0]))[None]
             else:
                 res = isa.nary_op(op, blk)           # (C', w)
+            self._account_sim_log(isa.sim, before)
             pieces.append(res)
         out = np.concatenate(pieces, axis=0).reshape(-1)[:r * c * 32]
         return kops.ref.pack_bits(jnp.asarray(out.reshape(r, c * 32)))
@@ -350,10 +437,12 @@ class PudEngine:
         for lo in range(0, chunks.shape[0], blk_sz):
             blk = chunks[lo:lo + blk_sz]
             isa = self._isa_for(blk.shape[0])
+            before = self._log_snapshot(isa.sim)
             if blk.shape[0] == 1:
                 res = isa.op_not(blk[0])[None]
             else:
                 res = isa.op_not(blk)                # (C', w)
+            self._account_sim_log(isa.sim, before)
             pieces.append(res)
         out = np.concatenate(pieces, axis=0).reshape(-1)[:r * c * 32]
         return kops.ref.pack_bits(jnp.asarray(out.reshape(r, c * 32)))

@@ -125,20 +125,22 @@ def test_mc_not_matches_closed_form():
     assert abs(got - want) < 4.0, (got, want)
 
 
-def test_percell_bimodality():
+def test_percell_bimodality(mc_trials):
     """The cell population is heterogeneous (wide box plots, Fig. 15):
     a reliable sub-population and a failing one coexist."""
     from repro.core.charz import measure_cell_map
-    m = measure_cell_map("and", 2, trials=120, row_bits=2048, seed=9)
+    m = measure_cell_map("and", 2, trials=mc_trials(120, 60), row_bits=2048,
+                         seed=9)
     assert np.std(m) > 0.05                      # wide spread across cells
     assert np.sum(m <= 0.6) > 0.02 * m.size      # a failing population
     assert 0.5 < np.mean(m) < 0.98
 
 
-def test_percell_perfect_not_cells_obs3():
+def test_percell_perfect_not_cells_obs3(mc_trials):
     """Obs 3: for NOT there exist cells with 100% success over all trials."""
     from repro.core.charz import measure_cell_map_not
-    m = measure_cell_map_not(trials=150, row_bits=2048, seed=12)
+    m = measure_cell_map_not(trials=mc_trials(150, 75), row_bits=2048,
+                             seed=12)
     assert np.sum(m >= 1.0) > 0
     assert np.mean(m) > 0.8
 
