@@ -29,7 +29,9 @@ def _success_keys(snap: dict) -> dict[str, float]:
             ("program_speedup_detail", "program",
              ("per_trial_success", "batched_success")),
             ("resident_detail", "resident",
-             ("staged_success", "resident_success"))):
+             ("staged_success", "resident_success")),
+            ("scheduled_detail", "scheduled",
+             ("scheduled_success",))):
         for name, d in snap.get(section, {}).items():
             for kind in kinds:
                 if kind in d:

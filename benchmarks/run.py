@@ -9,6 +9,8 @@ Prints CSV sections:
     unified trial-batched executor) per-trial vs batched,
   * resident-register vs host-staged program execution (RowClone-chained
     intermediates: host-write bus-byte reduction at matched success),
+  * scheduled vs greedy resident execution (compile-time polarity
+    scheduling: polarity-spill reduction at matched success),
   * in-DRAM vs CPU cost model (the paper's motivation, Table-style),
   * kernel micro-benchmarks (packed-op throughput on this host),
   * PuD-engine offload accounting on LM workloads.
@@ -16,7 +18,7 @@ Prints CSV sections:
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]
 
 ``--json`` additionally writes machine-readable timings + success-rate
-deltas (default path BENCH_pr3.json) so CI can archive the trajectory;
+deltas (default path BENCH_pr4.json) so CI can archive the trajectory;
 ``benchmarks.diff_bench`` compares snapshots across PRs/nightlies.
 """
 from __future__ import annotations
@@ -349,6 +351,64 @@ def resident_vs_staged(fast=False):
     return red4
 
 
+def scheduled_vs_greedy(fast=False):
+    """Scheduled vs greedy resident execution: the compile-time
+    polarity/residency scheduler (consumer-polarity De Morgan forms,
+    pressure ordering, Belady rows) against the PR-3 greedy policy —
+    same programs, same seeds.  Acceptance target: >= 30% fewer polarity
+    spills on the 4-bit adder at matched Monte-Carlo success; the static
+    plan's command counts ARE the measured stream (test-enforced), so the
+    spill/traffic columns double as the cost-model table.
+    """
+    from repro.core import charz
+    from repro.core import compiler as CC
+    from repro.core.isa import PudIsa
+    from repro.core.simulator import BankSim
+
+    trials = {"xor": 216, "maj3": 216, "add4": 54 if fast else 108}
+    rows = []
+    detail = {}
+    for name, tr in trials.items():
+        prog = charz.get_program(name)
+        plans = {}
+        for policy in ("greedy", "scheduled"):
+            isa = PudIsa(BankSim(row_bits=2048, seed=0,
+                                 error_model="analog", trials=12,
+                                 track_unshared=False))
+            plans[policy] = CC.schedule_resident(prog, isa, policy=policy)
+        g, s = plans["greedy"], plans["scheduled"]
+        t0 = time.perf_counter()
+        succ = float(charz.mc_program_success(name, trials=tr, seed=0,
+                                              resident="scheduled"))
+        t_mc = time.perf_counter() - t0
+        red = (1.0 - s.polarity_spills / g.polarity_spills
+               if g.polarity_spills else 0.0)
+        rows.append((name, tr, g.polarity_spills, s.polarity_spills,
+                     round(100 * red, 1), g.writes, s.writes,
+                     g.rowclones, s.rowclones, round(100 * succ, 2),
+                     round(t_mc, 3)))
+        detail[name] = {
+            "trials": tr,
+            "greedy_spills": g.polarity_spills,
+            "scheduled_spills": s.polarity_spills,
+            "spill_reduction": red,
+            "greedy_wr": g.writes, "scheduled_wr": s.writes,
+            "greedy_rowclones": g.rowclones,
+            "scheduled_rowclones": s.rowclones,
+            "scheduled_success": succ,
+        }
+    _csv("Scheduled vs greedy resident execution (polarity scheduling)",
+         rows,
+         "program,trials,greedy_spills,sched_spills,spill_reduction_pct,"
+         "greedy_wr,sched_wr,greedy_rc,sched_rc,sched_succ,sched_mc_s")
+    red4 = detail["add4"]["spill_reduction"]
+    _p(f"add4 scheduled polarity-spill reduction: {100 * red4:.1f}% "
+       f"(target >= 30%)")
+    RESULTS["scheduled_detail"] = detail
+    RESULTS["sched_spill_reduction_add4"] = red4
+    return red4
+
+
 def calibration_scorecard():
     from repro.core import analog as A
     from repro.core import calibrate as C
@@ -448,7 +508,7 @@ def _json_path(argv) -> str | None:
     i = argv.index("--json")
     if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
         return argv[i + 1]
-    return "BENCH_pr3.json"
+    return "BENCH_pr4.json"
 
 
 def main() -> None:
@@ -469,6 +529,7 @@ def main() -> None:
     charz_batched_speedup(fast=fast)
     program_mc_speedup(fast=fast)
     resident_vs_staged(fast=fast)
+    scheduled_vs_greedy(fast=fast)
     calibration_scorecard()
     cost_model_table()
     reliability_planning()

@@ -26,16 +26,28 @@ for op in ("and", "nand", "or", "nor"):
           f"paper {100 * d['paper_16'][op]:.2f}%")
 
 print("\nProgram-level success (trial-batched executor, 108 trials)")
-print("  program  native_ops  MC_staged  MC_resident  indep_op_est")
+print("  program  native_ops  MC_staged  MC_resident  MC_scheduled  "
+      "indep_op_est  spills g->s")
+from repro.core import compiler as CC
+from repro.core.isa import PudIsa
+from repro.core.simulator import BankSim
 for name in ("xor", "maj3", "add4"):
     prog = charz.get_program(name)
     n_ops = sum(1 for i in prog.instrs if i.op not in ("input", "const"))
     p = charz.mc_program_success(name, trials=108, row_bits=1024)
     pr = charz.mc_program_success(name, trials=108, row_bits=1024,
                                   resident=True)
+    ps = charz.mc_program_success(name, trials=108, row_bits=1024,
+                                  resident="scheduled")
     est = charz.program_success_estimate(name)
+    # the compile-time polarity scheduler's spill win (static plan counts
+    # == the measured command log, so these are the real RD round-trips)
+    spl = {pol: CC.schedule_resident(
+        prog, PudIsa(BankSim(row_bits=1024, seed=0)), policy=pol)
+        .polarity_spills for pol in ("greedy", "scheduled")}
     print(f"  {name:7s} {n_ops:10d} {100 * p:9.2f}% {100 * pr:10.2f}% "
-          f"{100 * est:11.2f}%")
+          f"{100 * ps:12.2f}% {100 * est:12.2f}%  "
+          f"{spl['greedy']:3d} -> {spl['scheduled']}")
 
 print("\nObs 3 - per-cell NOT success map (perfect cells exist)")
 m = charz.measure_cell_map_not(trials=120, row_bits=1024)
@@ -50,3 +62,9 @@ for op, n in (("and", 16), ("nand", 2)):
     pl = R.plan(op, n, 0.9999)
     print(f"  {op}{n}: raw {100 * pl.p_raw:.2f}% -> {pl.replicas} replicas "
           f"@ best placement -> {100 * pl.p_final:.4f}%")
+# per-*program* replica counts from measured program-level MC: whole-
+# program error propagation beats the pessimistic independent-op product
+pl = R.plan(target=0.9999, program="maj3", trials=54)
+print(f"  {pl.op}: measured raw {100 * pl.p_raw:.2f}% -> "
+      f"{pl.replicas} replicas ({pl.ops_total} native ops) -> "
+      f"{100 * pl.p_final:.4f}%")

@@ -307,7 +307,7 @@ def program_success_estimate(name: str, module: str | None = None,
 def mc_program_success(program: str | CC.Program, *, trials: int = 200,
                        row_bits: int = 2048, seed: int = 0,
                        module: str | None = None, temp_c: float = 50.0,
-                       batched: bool = True, resident: bool = False,
+                       batched: bool = True, resident: bool | str = False,
                        groups: int = MC_PAIR_GROUPS) -> float:
     """Bit-averaged MC success of a whole compiled program on the noisy
     simulator: every output bit of every trial is compared against
@@ -322,10 +322,14 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
     execution per trial on a scalar sim (same statistic; the walk then
     advances every instruction of every trial).
 
-    ``resident=True`` routes execution through the resident-register
-    executor (RowClone-chained intermediates) instead of the host-staged
-    path — the same statistic over a different command stream (requires
-    ``batched=True``; rows are recycled between groups, not mid-program).
+    ``resident=True`` (or ``"greedy"``) routes execution through the
+    resident-register executor (RowClone-chained intermediates) instead of
+    the host-staged path — the same statistic over a different command
+    stream (requires ``batched=True``; rows are recycled between groups,
+    not mid-program).  ``resident="scheduled"`` additionally runs the
+    compile-time polarity/residency scheduler; the (order, form) search
+    runs once and later groups replan with the frozen decisions while the
+    activation-pair walk keeps sweeping.
     """
     prog = get_program(program) if isinstance(program, str) else program
     names = sorted({i.name for i in prog.instrs if i.op == "input"})
@@ -341,11 +345,19 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
                       temp_c=temp_c, error_model="analog", trials=tg,
                       track_unshared=False)
         isa = PudIsa(sim)
+        sched_fixed = None
         for _g in range(groups):
+            plan = None
             if resident:
                 sim.recycle_rows()   # resident runs re-stage all state
+                if resident == "scheduled":
+                    plan = CC.schedule_resident(prog, isa,
+                                                policy="scheduled",
+                                                _fixed=sched_fixed)
+                    sched_fixed = (plan.order, plan.demorgan)
             ins = {n: _random_bits(rng, (tg, isa.width)) for n in names}
-            got = CC.run_sim(prog, ins, isa, trials=tg, resident=resident)
+            got = CC.run_sim(prog, ins, isa, trials=tg, resident=resident,
+                             plan=plan)
             want = CC.run_ideal(prog, ins, width=isa.width)
             ok += sum(int(np.sum(got[k] == want[k])) for k in prog.outputs)
             tot += sum(got[k].size for k in prog.outputs)

@@ -23,10 +23,17 @@ executors share the IR:
     where registers are ``(T, width)`` planes and every instruction is one
     vectorized Monte-Carlo episode (``batched=False`` keeps the per-trial
     loop as the reference implementation).  ``resident=True`` switches
-    from host-staged operand round-trips to the *resident-register*
-    executor (:class:`_ResidentRun`): SSA registers live in physical rows
-    of the subarray pair and chain between instructions via RowClone —
-    the in-bank discipline the paper's Section 7 cost argument assumes,
+    from host-staged operand round-trips to *resident-register* execution:
+    SSA registers live in physical rows of the subarray pair and chain
+    between instructions via RowClone — the in-bank discipline the paper's
+    Section 7 cost argument assumes.  Resident execution is plan/execute:
+    :func:`schedule_resident` emits an explicit :class:`ResidentPlan`
+    (instruction order, De Morgan forms, pinned activation pairs, row
+    assignments, relocation clones, polarity spills) that
+    :class:`_ResidentExec` replays mechanically — ``resident="scheduled"``
+    turns on the compile-time polarity/residency scheduler, and
+    ``Program.cost(plan=...)`` statically reproduces the measured command
+    log of the run,
   * ``repro.pud.engine.PudEngine.run_program`` — packed bit-plane
     execution on the jnp / Pallas / chunk-batched-DRAM backends with
     per-instruction offload metering (``PudEngine(resident=True)`` routes
@@ -131,7 +138,19 @@ class Program:
             out[i.op] = out.get(i.op, 0) + 1
         return out
 
-    def cost(self, cm: CostModel | None = None) -> OpCost:
+    def cost(self, cm: CostModel | None = None, *,
+             plan: "ResidentPlan | None" = None) -> OpCost:
+        """Static DDR4-command cost estimate.
+
+        Default: the per-instruction *modeled* cost (host-staged
+        semantics).  With ``plan=`` (a :class:`ResidentPlan` from
+        :func:`schedule_resident`) the cost is derived from the planned
+        resident command stream and reconciles exactly with the
+        ``BankSim`` command log a mechanical execution of that plan
+        produces — measured and static cost agree by construction.
+        """
+        if plan is not None:
+            return plan.cost(cm)
         cm = cm or CostModel()
         total = OpCost()
         for i in self.instrs:
@@ -298,10 +317,152 @@ def _run_sim_once(prog: Program, inputs: dict[str, np.ndarray],
 
 
 # ---------------------------------------------------------------------------
-# Resident-register execution (RowClone chaining)
+# Resident-register planning + execution (RowClone chaining, plan/execute)
 # ---------------------------------------------------------------------------
-class _ResidentRun:
-    """One resident-register pass of a Program over a PudIsa.
+@dataclass(frozen=True)
+class PlanStep:
+    """One mechanical step of a :class:`ResidentPlan`.
+
+    ``kind``: ``"host"`` (input/const materializes host-side, no commands),
+    ``"bool"`` / ``"not"`` (one APA with its staging), ``"output"`` (one
+    result readout).  ``pre`` is the *ordered* micro-op list issued before
+    the APA — the exact DRAM command order the executor replays:
+
+    * ``("reloc", side, src, dst)``   — RowClone a live row out of the way,
+    * ``("fill", side, row, v)``      — host-write a constant row (WR),
+    * ``("spill", reg, side, row, neg)`` — host RD of a resident register
+      (the *polarity spill* the scheduler minimizes),
+    * ``("park", reg, row, neg)``     — host-write a multi-use word into an
+      l-side register-file row (WR).
+
+    ``sources`` are per-activated-row staging specs: ``("clone", row)`` or
+    ``("write", reg, neg)`` (host word, complemented when ``neg``).
+    """
+
+    kind: str
+    instr: Instr | None = None
+    exec_op: str = ""            # base op actually executed (post-De-Morgan)
+    demorgan: bool = False
+    rf: int = -1
+    rl: int = -1
+    act: object = None
+    pre: tuple = ()
+    sources: tuple = ()
+    ref_row: int | None = None
+    # output steps
+    name: str = ""
+    reg: int = -1
+    where: tuple = ()            # ("host",) | (side, row, neg)
+
+
+@dataclass
+class ResidentPlan:
+    """Static resident-execution schedule of one Program on one PudIsa.
+
+    The plan pins every decision the executor would otherwise make on the
+    fly — instruction order, nand-vs-and / nor-vs-or forms (``demorgan``),
+    activation pairs, row assignments, relocation clones and polarity
+    spills — so ``_run_sim_resident`` executes it *mechanically* and the
+    DRAM command stream is known before the first command issues.  The
+    counter fields tally that stream exactly: they reconcile, command for
+    command, with the ``BankSim.log`` delta of the execution (the golden
+    parity contract in tests/test_scheduler.py).
+    """
+
+    policy: str
+    order: list[int]                       # instruction execution order
+    steps: list[PlanStep]
+    demorgan: dict[int, bool]              # instr index -> form choice
+    assignments: dict[str, tuple]          # output name -> (side, row)|host
+    carry: dict                            # (side, v) -> const row (sessions)
+    module: object = None
+    row_bits: int = 0
+    # ---- command-stream tally (== the measured BankSim.log delta) ----
+    writes: int = 0                        # WR: fills + parks + write-staging
+    reads: int = 0                         # RD: polarity spills + outputs
+    rowclones: int = 0                     # RC: relocs + ref/operand clones
+    fracs: int = 0
+    apas: int = 0
+    acts: int = 0                          # rows activated across all APAs
+    polarity_spills: int = 0               # host round-trips of residents
+
+    def command_counts(self) -> dict[str, int]:
+        """Predicted ``BankSim.log.counts`` delta of executing this plan."""
+        return {"WR": self.writes, "RD": self.reads, "RC": self.rowclones,
+                "FRAC": self.fracs, "APA": self.apas}
+
+    def expected_log(self, cm: CostModel | None = None) -> tuple[float, float]:
+        """Predicted on-die (time_ns, energy_pj) of the sim command log."""
+        cm = cm or CostModel(self.module, row_bits=self.row_bits)
+        t = e = 0.0
+        for n, (ct, ce) in ((self.writes, cm.log_write()),
+                            (self.reads, cm.log_read()),
+                            (self.rowclones, cm.log_rowclone()),
+                            (self.fracs, cm.log_frac())):
+            t += n * ct
+            e += n * ce
+        for st in self.steps:
+            if st.kind in ("bool", "not"):
+                ct, ce = cm.log_apa(st.act.n_rf + st.act.n_rl,
+                                    first_restored=st.kind == "not")
+                t += ct
+                e += ce
+        return t, e
+
+    def staged_bytes(self) -> int:
+        """Host->DRAM staging bytes (the OffloadReport quantity)."""
+        return self.writes * (self.row_bits // 8)
+
+    def cost(self, cm: CostModel | None = None) -> OpCost:
+        """Measured-semantics cost: the on-die command log plus the same
+        off-chip IO adjustments ``PudEngine._account_sim_log`` applies, so
+        the static estimate equals the OffloadReport's dram side."""
+        cm = cm or CostModel(self.module, row_bits=self.row_bits)
+        t, e = self.expected_log(cm)
+        io_t, io_e, io_b = cm.io_adjustment(self.writes + self.reads)
+        return OpCost(t + io_t, e + io_e,
+                      commands=sum(self.command_counts().values()),
+                      bus_bytes=io_b)
+
+
+def _tally(steps) -> tuple[int, int, int, int, int, int, int]:
+    """(writes, reads, rowclones, fracs, apas, acts, spills) of a step
+    list — mirrors :meth:`PudIsa.clone_word`'s src==dst no-op exactly."""
+    wr = rd = rc = frac = apa = acts = spills = 0
+    for st in steps:
+        for m in st.pre:
+            if m[0] == "reloc":
+                rc += 1
+            elif m[0] in ("fill", "park"):
+                wr += 1
+            elif m[0] == "spill":
+                rd += 1
+                spills += 1
+        if st.kind == "bool":
+            rc += sum(1 for r in st.act.rows_f[:-1] if int(r) != st.ref_row)
+            frac += 1
+            for k, src in enumerate(st.sources):
+                if src[0] == "clone":
+                    rc += int(src[1] != int(st.act.rows_l[k]))
+                else:
+                    wr += 1
+            apa += 1
+            acts += st.act.n_rf + st.act.n_rl
+        elif st.kind == "not":
+            src = st.sources[0]
+            if src[0] == "clone":
+                rc += sum(1 for r in st.act.rows_f if int(r) != src[1])
+            else:
+                wr += st.act.n_rf
+            apa += 1
+            acts += st.act.n_rf + st.act.n_rl
+        elif st.kind == "output" and st.where[0] != "host":
+            rd += 1
+    return wr, rd, rc, frac, apa, acts, spills
+
+
+class _ResidentPlanner:
+    """Symbolic twin of resident execution: plans one Program pass.
 
     Data-movement algebra of an open-bitline subarray pair (f = reference
     side, l = compute side):
@@ -311,65 +472,79 @@ class _ResidentRun:
     * a Boolean APA consumes l-side operand rows and leaves the base
       AND/OR result on the l side plus its complement on the f side.
 
-    There is no same-value f -> l move, so the executor tracks, per SSA
-    register, the physical row holding its *value* and the row holding its
-    *complement*.  When an instruction's operands only have complements on
-    the compute side it rewrites through De Morgan onto the dual op
-    (``and(xs) == nor(~xs)``; the result then materializes on the f side)
-    instead of spilling.  Registers whose needed polarity is resident are
-    staged by RowClone; everything else falls back to an honest host
-    round-trip (RD + WR over the bus) — program inputs and consts are
-    host-known, so they stage with a WR and never need the RD.
+    There is no same-value f -> l move, so the planner tracks, per SSA
+    register, the row holding its *value* and the row holding its
+    *complement*, and chooses per instruction between the direct op form
+    and its De Morgan dual (``and(xs) == nor(~xs)``) — the dual consumes
+    complements and lands the value on the opposite side.  Registers whose
+    needed polarity is l-resident stage by RowClone; everything else falls
+    back to an honest host round-trip (RD + WR over the bus) — a *polarity
+    spill*.  Program inputs and consts are host-known and never need the
+    RD.  Rows about to be clobbered by an activation are relocated via
+    RowClone first; reference constants live in cached in-bank rows.
 
-    Row slots: SSA liveness (last-use indices) frees register rows; rows
-    about to be clobbered by the next activation pattern are relocated via
-    RowClone first (the allocator's spill path).  Reference constants live
-    in cached in-bank rows and are RowCloned — not host-written — into
-    each op's reference block.
+    Decision knobs (all recorded into the plan, none taken at run time):
+
+    * ``order``  — instruction execution order (topological),
+    * ``forced`` — per-instruction De Morgan choices; unlisted instructions
+      choose greedily by current-state miss counting (the PR-3 rule),
+    * ``future`` — per-side upcoming activation row sets; when given, the
+      row allocator goes Belady (pick the free row reused farthest in the
+      future) instead of first-free, cutting relocation RowClones.
+
+    With defaults (program order, no forcing, first-free allocation) the
+    planned command stream is *identical* to the PR-3 greedy executor's.
     """
 
-    def __init__(self, prog: Program, inputs: dict[str, np.ndarray],
-                 isa: PudIsa):
+    def __init__(self, prog: Program, isa: PudIsa, *, order=None,
+                 forced: dict[int, bool] | None = None, future=None,
+                 carry: dict | None = None):
         self.prog, self.isa, self.sim = prog, isa, isa.sim
-        self.width, self.t = isa.width, isa.trials
-        want = (((self.width,),) if self.t is None
-                else ((self.width,), (self.t, self.width)))
-        self.inputs = {}
-        for i in prog.instrs:
-            if i.op != "input":
-                continue
-            v = np.asarray(inputs[i.name], dtype=np.uint8)
-            if v.shape not in want:
-                raise ValueError(
-                    f"input {i.name}: want shape in {want}, got {v.shape}")
-            self.inputs[i.name] = v
-        #: digital words the host knows exactly (inputs, consts, spills)
-        self.host: dict[int, np.ndarray] = {}
-        #: reg -> (side, row) of the row holding the value / the complement
+        self.order = (list(order) if order is not None
+                      else list(range(len(prog.instrs))))
+        self.forced = forced or {}
+        self.future = future
+        self.apa_pos = 0
+        self.steps: list[PlanStep] = []
+        #: regs whose exact digital word the host will know at this point
+        self.host: set[int] = set()
         self.val: dict[int, tuple[str, int]] = {}
         self.neg: dict[int, tuple[str, int]] = {}
-        #: per-side row ownership: row -> ("val"|"neg", reg) | ("const", v)
         self.owned: dict[str, dict[int, tuple]] = {"f": {}, "l": {}}
-        self.consts: dict[tuple[str, int], int] = {}
+        self.consts: dict[tuple[str, int], int] = dict(carry or {})
+        for (side, v), row in self.consts.items():
+            self.owned[side][row] = ("const", v)
+        self.choices: dict[int, bool] = {}
+        # liveness in execution-order positions
+        pos = {idx: k for k, idx in enumerate(self.order)}
         self.last_use: dict[int, int] = {}
         self.uses_left: dict[int, int] = {}
-        for idx, ins in enumerate(prog.instrs):
-            for s in ins.srcs:
-                self.last_use[s] = idx
+        for idx in self.order:
+            for s in prog.instrs[idx].srcs:
+                self.last_use[s] = pos[idx]
                 self.uses_left[s] = self.uses_left.get(s, 0) + 1
         for r in prog.outputs.values():
             self.last_use[r] = len(prog.instrs)
 
     # ---------------- row bookkeeping ----------------
-    def _sub(self, side: str) -> int:
-        return self.isa.f_sub if side == "f" else self.isa.l_sub
-
     def _alloc(self, side: str, exclude) -> int:
         owned = self.owned[side]
+        fut = None if self.future is None else self.future[side]
+        best, best_t = -1, -1
         for r in range(self.sim.geom.rows_per_subarray):
-            if r not in owned and r not in exclude:
+            if r in owned or r in exclude:
+                continue
+            if fut is None:
                 return r
-        raise RuntimeError("subarray out of resident-register rows")
+            t = next((k for k in range(self.apa_pos, len(fut))
+                      if r in fut[k]), len(fut) + 1)
+            if t > best_t:
+                best, best_t = r, t
+            if t > len(fut):
+                break            # never activated again: lowest such row
+        if best < 0:
+            raise RuntimeError("subarray out of resident-register rows")
+        return best
 
     def _claim(self, side: str, row: int, tag: tuple) -> None:
         kind, ref = tag
@@ -383,7 +558,7 @@ class _ResidentRun:
             self.consts[(side, ref)] = row
         self.owned[side][row] = tag
 
-    def _relocate(self, act) -> None:
+    def _relocate(self, act, pre: list) -> None:
         """RowClone live rows out of the way of the next activation."""
         for side, rows in (("f", act.rows_f), ("l", act.rows_l)):
             rows = {int(r) for r in rows}
@@ -391,7 +566,7 @@ class _ResidentRun:
             for r in sorted(rows & set(owned)):
                 tag = owned.pop(r)
                 new = self._alloc(side, rows)
-                self.isa.clone_word(self._sub(side), r, new)
+                pre.append(("reloc", side, r, new))
                 self._claim(side, new, tag)
 
     def _release(self, reg: int) -> None:
@@ -400,29 +575,29 @@ class _ResidentRun:
             if loc is not None:
                 self.owned[loc[0]].pop(loc[1], None)
 
-    def _const_row(self, side: str, v: int, exclude) -> int:
+    def _const_row(self, side: str, v: int, exclude, pre: list) -> int:
         if (side, v) in self.consts:
             return self.consts[(side, v)]
         row = self._alloc(side, exclude)
-        self.isa.fill_const_row(self._sub(side), row, v)
+        pre.append(("fill", side, row, v))
         self._claim(side, row, ("const", v))
         return row
 
-    def _spill(self, reg: int) -> np.ndarray:
-        """Round-trip a resident register through the host (one RD)."""
+    def _spill(self, reg: int, pre: list) -> None:
+        """Plan a host round-trip of a resident register (one RD)."""
         if reg in self.host:
-            return self.host[reg]
+            return
         if reg in self.val:
             side, row = self.val[reg]
-            bits = self.isa.read_result_word(self._sub(side), row)
+            negf = False
         else:
             side, row = self.neg[reg]
-            bits = 1 - self.isa.read_result_word(self._sub(side), row)
-        self.host[reg] = bits.astype(np.uint8)
-        return self.host[reg]
+            negf = True
+        pre.append(("spill", reg, side, row, negf))
+        self.host.add(reg)
 
-    # ---------------- instruction execution ----------------
-    def _stage_sources(self, srcs, demorgan: bool, excl_l) -> list:
+    # ---------------- instruction planning ----------------
+    def _stage_sources(self, srcs, demorgan: bool, excl_l, pre: list) -> list:
         """Per-operand staging specs for :meth:`PudIsa.exec_nary`."""
         sources = []
         for s in srcs:
@@ -431,113 +606,397 @@ class _ResidentRun:
             if res is not None and res[0] == "l":
                 sources.append(("clone", res[1]))
                 continue
-            bits = self._spill(s)
-            if demorgan:
-                bits = (1 - bits).astype(np.uint8)
+            self._spill(s, pre)
             if self.uses_left.get(s, 0) > 0:
                 # multi-use host word: park it in a register-file row once
                 # and RowClone per use instead of re-writing every time
                 row = self._alloc("l", excl_l)
-                self.isa.stage_word(self.isa.l_sub, row, bits)
+                pre.append(("park", s, row, demorgan))
                 self._claim("l", row, ("neg" if demorgan else "val", s))
                 sources.append(("clone", row))
             else:
-                sources.append(("write", bits))
+                sources.append(("write", s, demorgan))
         return sources
 
-    def _exec_bool(self, i: Instr) -> None:
+    def _plan_bool(self, i: Instr, idx: int) -> None:
         srcs = list(i.srcs)
         base = "and" if i.op in ("and", "nand") else "or"
-        miss_direct = sum(1 for s in srcs
-                          if s not in self.host
-                          and self.val.get(s, ("?",))[0] != "l")
-        miss_dem = sum(1 for s in srcs
-                       if s not in self.host
-                       and self.neg.get(s, ("?",))[0] != "l")
-        demorgan = miss_dem < miss_direct
+        if idx in self.forced:
+            demorgan = self.forced[idx]
+        else:
+            miss_direct = sum(1 for s in srcs
+                              if s not in self.host
+                              and self.val.get(s, ("?",))[0] != "l")
+            miss_dem = sum(1 for s in srcs
+                           if s not in self.host
+                           and self.neg.get(s, ("?",))[0] != "l")
+            demorgan = miss_dem < miss_direct
+        self.choices[idx] = demorgan
         exec_base = ("or" if base == "and" else "and") if demorgan else base
         n_hw, rf, rl, act = self.isa.plan_nary(exec_base, len(srcs))
-        self._relocate(act)
+        pre: list = []
+        self._relocate(act, pre)
         excl_f = {int(r) for r in act.rows_f}
         excl_l = {int(r) for r in act.rows_l}
         ref_row = self._const_row("f", 1 if exec_base == "and" else 0,
-                                  excl_f)
-        sources = self._stage_sources(srcs, demorgan, excl_l)
+                                  excl_f, pre)
+        sources = self._stage_sources(srcs, demorgan, excl_l, pre)
         ident = 1 if exec_base == "and" else 0
         for _ in range(n_hw - len(srcs)):
-            sources.append(("clone", self._const_row("l", ident, excl_l)))
-        res_l, res_f = self.isa.exec_nary(exec_base, rf, rl, act, sources,
-                                          ref_row=ref_row)
+            sources.append(("clone", self._const_row("l", ident, excl_l,
+                                                     pre)))
         # the APA leaves exec_base(staged operands) on the l side and its
         # complement on the f side; map them back onto i.dst's polarity
         val_on_l = (i.op in ("nand", "nor")) == demorgan
-        self._claim("l", res_l, ("val" if val_on_l else "neg", i.dst))
-        self._claim("f", res_f, ("neg" if val_on_l else "val", i.dst))
+        self._claim("l", int(act.rows_l[0]),
+                    ("val" if val_on_l else "neg", i.dst))
+        self._claim("f", int(act.rows_f[0]),
+                    ("neg" if val_on_l else "val", i.dst))
+        self.steps.append(PlanStep(
+            "bool", instr=i, exec_op=exec_base, demorgan=demorgan, rf=rf,
+            rl=rl, act=act, pre=tuple(pre), sources=tuple(sources),
+            ref_row=ref_row))
+        self.apa_pos += 1
 
-    def _exec_not(self, i: Instr) -> None:
+    def _plan_not(self, i: Instr, idx: int) -> None:
         x = i.srcs[0]
         if self.val.get(x, ("?",))[0] == "l":
             # no same-value f->l move exists: complement on the compute
             # side via the self-NAND (the result lands on the f side)
-            self._exec_bool(Instr("nand", i.dst, (x, x)))
+            self._plan_bool(Instr("nand", i.dst, (x, x)), idx)
             return
         self.uses_left[x] = self.uses_left.get(x, 1) - 1
         rf, rl, act = self.isa.plan_not(1)
-        self._relocate(act)
+        pre: list = []
+        self._relocate(act, pre)
         if self.val.get(x, ("?",))[0] == "f":
             source = ("clone", self.val[x][1])
         else:
-            source = ("write", self._spill(x))
-        res_l, src_f = self.isa.exec_not(rf, rl, act, source)
+            self._spill(x, pre)
+            source = ("write", x, False)
         # dst = ~x lands on the l side; the restored source rows hold x,
         # i.e. dst's complement, on the f side
-        self._claim("l", res_l, ("val", i.dst))
-        self._claim("f", src_f, ("neg", i.dst))
+        self._claim("l", int(act.rows_l[0]), ("val", i.dst))
+        self._claim("f", int(act.rows_f[0]), ("neg", i.dst))
+        self.steps.append(PlanStep(
+            "not", instr=i, exec_op="not", rf=rf, rl=rl, act=act,
+            pre=tuple(pre), sources=(source,)))
+        self.apa_pos += 1
 
     # ---------------- driver ----------------
-    def run(self) -> dict[str, np.ndarray]:
-        for idx, i in enumerate(self.prog.instrs):
-            if i.op == "input":
-                self.host[i.dst] = self.inputs[i.name]
-            elif i.op == "const":
-                self.host[i.dst] = np.full(self.width, int(i.value),
-                                           dtype=np.uint8)
+    def plan(self, policy: str) -> ResidentPlan:
+        for k, idx in enumerate(self.order):
+            i = self.prog.instrs[idx]
+            if i.op in ("input", "const"):
+                self.host.add(i.dst)
+                self.steps.append(PlanStep("host", instr=i))
             elif i.op == "not":
-                self._exec_not(i)
+                self._plan_not(i, idx)
             elif i.op in ("and", "or", "nand", "nor"):
-                self._exec_bool(i)
+                self._plan_bool(i, idx)
             else:
                 raise ValueError(i.op)
             for s in set(i.srcs):
-                if self.last_use.get(s) == idx:
+                if self.last_use.get(s) == k:
                     self._release(s)
-        out: dict[str, np.ndarray] = {}
+        assignments: dict[str, tuple] = {}
         for name, r in self.prog.outputs.items():
             if r in self.host:
-                bits = self.host[r]
+                where: tuple = ("host",)
             elif r in self.val:
                 side, row = self.val[r]
-                bits = self.isa.read_result_word(self._sub(side), row)
+                where = (side, row, False)
             else:
                 side, row = self.neg[r]
-                bits = (1 - self.isa.read_result_word(self._sub(side), row))
-            bits = np.asarray(bits, dtype=np.uint8)
-            if self.t is not None and bits.ndim == 1:
-                bits = np.broadcast_to(bits, (self.t, self.width)).copy()
-            out[name] = bits
+                where = (side, row, True)
+            assignments[name] = where
+            self.steps.append(PlanStep("output", name=name, reg=r,
+                                       where=where))
+        wr, rd, rc, frac, apa, acts, spills = _tally(self.steps)
+        return ResidentPlan(
+            policy=policy, order=self.order, steps=self.steps,
+            demorgan=dict(self.choices), assignments=assignments,
+            carry=dict(self.consts), module=self.sim.module,
+            row_bits=self.sim.geom.row_bits, writes=wr, reads=rd,
+            rowclones=rc, fracs=frac, apas=apa, acts=acts,
+            polarity_spills=spills)
+
+
+def _pressure_order(prog: Program) -> list[int]:
+    """Topological list schedule minimizing live-register pressure.
+
+    Greedy pick among ready instructions: prefer the one that kills the
+    most operands (frees rows), then the one consuming the most recently
+    produced value (chain-following keeps producer/consumer polarity
+    adjacent), then original program order.
+    """
+    n = len(prog.instrs)
+    uses: dict[int, int] = {}
+    for ins in prog.instrs:
+        for s in ins.srcs:
+            uses[s] = uses.get(s, 0) + 1
+    for r in prog.outputs.values():
+        uses[r] = uses.get(r, 0) + 1
+    producer = {ins.dst: k for k, ins in enumerate(prog.instrs)}
+    deps_left = [len({producer[s] for s in ins.srcs})
+                 for ins in prog.instrs]
+    consumers: dict[int, list[int]] = {}
+    for k, ins in enumerate(prog.instrs):
+        for p in {producer[s] for s in ins.srcs}:
+            consumers.setdefault(p, []).append(k)
+    ready = sorted(k for k in range(n) if deps_left[k] == 0)
+    emitted_at: dict[int, int] = {}
+    order: list[int] = []
+    while ready:
+        def score(k: int):
+            ins = prog.instrs[k]
+            frees = sum(1 for s in set(ins.srcs)
+                        if uses[s] == ins.srcs.count(s))
+            recency = max((emitted_at.get(s, -1) for s in ins.srcs),
+                          default=-1)
+            return (frees, recency, -k)
+        k = max(ready, key=score)
+        ready.remove(k)
+        ins = prog.instrs[k]
+        order.append(k)
+        emitted_at[ins.dst] = len(order)
+        for s in set(ins.srcs):
+            uses[s] -= ins.srcs.count(s)
+        for c in consumers.get(k, ()):
+            deps_left[c] -= 1
+            if deps_left[c] == 0:
+                ready.append(c)
+    return order
+
+
+def schedule_resident(prog: Program, isa: PudIsa, *,
+                      policy: str = "scheduled",
+                      carry: dict | None = None,
+                      _fixed: tuple | None = None) -> ResidentPlan:
+    """Compile-time polarity/residency scheduling pre-pass.
+
+    Returns the :class:`ResidentPlan` that ``run_sim(..., resident=...)``
+    executes mechanically.  ``policy="greedy"`` reproduces the PR-3
+    dynamic executor's command stream exactly (program order, miss-count
+    De Morgan choices, first-free rows).  ``policy="scheduled"`` searches:
+
+    1. two candidate instruction orders (program order and a live-range
+       pressure schedule),
+    2. per-order, coordinate descent over De Morgan form choices with a
+       greedy-rollout suffix (flip one instruction's form, let everything
+       after it re-choose greedily) — consumer polarity thereby steers
+       *producer* forms, which is where greedy loses: the form of an op
+       decides which side of the pair its value lands on,
+    3. a final Belady row-allocation pass using the now-known future
+       activation rows (relocation RowClones drop).
+
+    The descent starts from the greedy rollout and only accepts strict
+    improvements, so a scheduled plan never takes more polarity spills
+    than the greedy plan of the same program.  Planning advances the ISA's
+    scrambled pair walk exactly once (candidate rollouts snapshot/restore
+    it), so a plan + mechanical execution consumes pair-cursor state
+    identically to the dynamic executor it replaces.
+
+    ``carry`` seeds the planner's in-bank constant-row cache (cross-block
+    residency: see :class:`ResidentSession`).  ``_fixed=(order, forced)``
+    skips the search and replans with known decisions (session reuse).
+    """
+    if policy not in ("greedy", "scheduled"):
+        raise ValueError(f"unknown resident policy {policy!r}")
+    if policy == "greedy":
+        return _ResidentPlanner(prog, isa, carry=carry).plan("greedy")
+
+    cursor0 = dict(isa._pair_cursor)
+
+    def attempt(order, forced, future=None) -> ResidentPlan:
+        isa._pair_cursor.clear()
+        isa._pair_cursor.update(cursor0)
+        return _ResidentPlanner(prog, isa, order=order, forced=forced,
+                                future=future, carry=carry).plan("scheduled")
+
+    def key(pl: ResidentPlan):
+        return (pl.polarity_spills, pl.rowclones, pl.writes, pl.reads)
+
+    if _fixed is not None:
+        order, forced = _fixed
+        best = attempt(order, forced)
+    else:
+        orders = [list(range(len(prog.instrs)))]
+        pressure = _pressure_order(prog)
+        if pressure != orders[0]:
+            orders.append(pressure)
+        best = None
+        for order in orders:
+            pos = {idx: k for k, idx in enumerate(order)}
+            cand = attempt(order, {})          # greedy rollout baseline
+            for _sweep in range(4):
+                improved = False
+                for idx in sorted(cand.demorgan, key=pos.__getitem__):
+                    if idx not in cand.demorgan:
+                        continue   # a NOT switched form in an accepted trial
+                    forced = {j: d for j, d in cand.demorgan.items()
+                              if pos[j] < pos[idx]}
+                    forced[idx] = not cand.demorgan[idx]
+                    trial = attempt(order, forced)
+                    if key(trial) < key(cand):
+                        cand = trial
+                        improved = True
+                if not improved:
+                    break
+            if best is None or key(cand) < key(best):
+                best = cand
+    # Belady allocation pass: decisions fixed, future activations known
+    future = {
+        "f": [frozenset(int(r) for r in st.act.rows_f)
+              for st in best.steps if st.kind in ("bool", "not")],
+        "l": [frozenset(int(r) for r in st.act.rows_l)
+              for st in best.steps if st.kind in ("bool", "not")],
+    }
+    belady = attempt(best.order, best.demorgan, future=future)
+    # on a rejected belady pass `best` is still valid as-is: row allocation
+    # never touches the pair cursor, so both attempts consumed it equally
+    return belady if key(belady) <= key(best) else best
+
+
+class _ResidentExec:
+    """Mechanically execute a ResidentPlan on the (noisy) simulator.
+
+    All decisions live in the plan; this class only moves data: it issues
+    the planned micro-ops in order, fills planned ``("write", reg, neg)``
+    sources with actual host words, and reads back planned outputs.
+    """
+
+    def __init__(self, plan: ResidentPlan, prog: Program,
+                 inputs: dict[str, np.ndarray], isa: PudIsa):
+        self.plan, self.prog, self.isa = plan, prog, isa
+        self.width, self.t = isa.width, isa.trials
+        want = (((self.width,),) if self.t is None
+                else ((self.width,), (self.t, self.width)))
+        self.inputs = {}
+        for i in prog.instrs:
+            if i.op != "input":
+                continue
+            v = np.asarray(inputs[i.name], dtype=np.uint8)
+            if v.shape not in want:
+                raise ValueError(
+                    f"input {i.name}: want shape in {want}, got {v.shape}")
+            self.inputs[i.name] = v
+
+    def _sub(self, side: str) -> int:
+        return self.isa.f_sub if side == "f" else self.isa.l_sub
+
+    def _word(self, host: dict, reg: int, neg: bool) -> np.ndarray:
+        bits = host[reg]
+        return (1 - bits).astype(np.uint8) if neg else bits
+
+    def run(self) -> dict[str, np.ndarray]:
+        isa = self.isa
+        host: dict[int, np.ndarray] = {}
+        out: dict[str, np.ndarray] = {}
+        for st in self.plan.steps:
+            if st.kind == "host":
+                i = st.instr
+                host[i.dst] = (self.inputs[i.name] if i.op == "input" else
+                               np.full(self.width, int(i.value),
+                                       dtype=np.uint8))
+                continue
+            if st.kind == "output":
+                if st.where[0] == "host":
+                    bits = host[st.reg]
+                else:
+                    side, row, negf = st.where
+                    bits = isa.read_result_word(self._sub(side), row)
+                    if negf:
+                        bits = 1 - bits
+                bits = np.asarray(bits, dtype=np.uint8)
+                if self.t is not None and bits.ndim == 1:
+                    bits = np.broadcast_to(bits,
+                                           (self.t, self.width)).copy()
+                out[st.name] = bits
+                continue
+            for m in st.pre:
+                if m[0] == "reloc":
+                    isa.clone_word(self._sub(m[1]), m[2], m[3])
+                elif m[0] == "fill":
+                    isa.fill_const_row(self._sub(m[1]), m[2], m[3])
+                elif m[0] == "spill":
+                    _, reg, side, row, negf = m
+                    bits = isa.read_result_word(self._sub(side), row)
+                    if negf:
+                        bits = 1 - bits
+                    host[reg] = bits.astype(np.uint8)
+                    isa.stats.spills += 1
+                else:                          # park
+                    _, reg, row, negf = m
+                    isa.stage_word(isa.l_sub, row,
+                                   self._word(host, reg, negf))
+            if st.kind == "bool":
+                sources = [s if s[0] == "clone"
+                           else ("write", self._word(host, s[1], s[2]))
+                           for s in st.sources]
+                isa.exec_nary(st.exec_op, st.rf, st.rl, st.act, sources,
+                              ref_row=st.ref_row)
+            else:                              # not
+                s = st.sources[0]
+                source = s if s[0] == "clone" \
+                    else ("write", self._word(host, s[1], s[2]))
+                isa.exec_not(st.rf, st.rl, st.act, source)
+        return out
+
+
+class ResidentSession:
+    """Resident execution that persists in-bank state across calls.
+
+    Each :meth:`run` plans and executes one pass of the program; the
+    planner's constant-row cache (``plan.carry``) carries into the next
+    call, so later passes RowClone reference/identity constants from rows
+    an earlier pass left behind instead of re-staging them from the host —
+    the cross-block residency the chunk-blocked dram engine uses (block
+    k's in-bank register file feeds block k+1 without a host hop).  With
+    ``policy="scheduled"`` the (order, form) search runs once and later
+    passes replan with the frozen decisions — polarity-spill counts are
+    decision-determined, so the optimum carries over while activation
+    pairs keep sweeping.  The caller must not recycle the sim's rows
+    between runs (reseeding per-trial noise is fine).
+    """
+
+    def __init__(self, prog: Program, isa: PudIsa, *,
+                 policy: str = "greedy"):
+        self.prog, self.isa = prog, isa
+        self.policy = "greedy" if policy is True else policy
+        self._carry: dict | None = None
+        self._fixed: tuple | None = None
+        self.plans: list[ResidentPlan] = []
+
+    def run(self, inputs: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        plan = schedule_resident(self.prog, self.isa, policy=self.policy,
+                                 carry=self._carry, _fixed=self._fixed)
+        out = _ResidentExec(plan, self.prog, inputs, self.isa).run()
+        self._carry = plan.carry
+        if self.policy == "scheduled":
+            self._fixed = (plan.order, plan.demorgan)
+        self.plans.append(plan)
+        self.isa.last_resident_plan = plan
         return out
 
 
 def _run_sim_resident(prog: Program, inputs: dict[str, np.ndarray],
-                      isa: PudIsa) -> dict[str, np.ndarray]:
-    """Resident-register pass: intermediates chain in-bank via RowClone."""
-    return _ResidentRun(prog, inputs, isa).run()
+                      isa: PudIsa, *, policy: str = "greedy",
+                      plan: ResidentPlan | None = None
+                      ) -> dict[str, np.ndarray]:
+    """Resident-register pass: plan (unless given), then execute it
+    mechanically — intermediates chain in-bank via RowClone."""
+    if plan is None:
+        plan = schedule_resident(prog, isa, policy=policy)
+    isa.last_resident_plan = plan
+    return _ResidentExec(plan, prog, inputs, isa).run()
 
 
 def run_sim(prog: Program, inputs: dict[str, np.ndarray], isa: PudIsa, *,
             trials: int | None = None, batched: bool = True,
             recycle: bool | None = None,
-            resident: bool = False) -> dict[str, np.ndarray]:
+            resident: bool | str = False,
+            plan: ResidentPlan | None = None) -> dict[str, np.ndarray]:
     """Execute on the (noisy) DRAM simulator through the ISA.
 
     Trial batching: on a ``PudIsa`` over ``BankSim(trials=T)`` the whole
@@ -562,17 +1021,27 @@ def run_sim(prog: Program, inputs: dict[str, np.ndarray], isa: PudIsa, *,
     op's rows instead of growing with the program; defaults to True on
     trial-batched sims, False on scalar sims (seed-compatible behavior).
 
-    ``resident=True`` — the resident-register executor: intermediates stay
-    *in the bank* across instructions (see :class:`_ResidentRun`), staged
-    between ops by RowClone instead of host write-backs; only program
-    inputs, reference-constant rows and the rare polarity spill cross the
-    bus, and only program *outputs* are read back.  Requires the batched
-    executor semantics (works on scalar and trial-batched sims alike) and
-    manages physical rows itself, so ``recycle`` is ignored.
+    ``resident`` — the resident-register executor: intermediates stay
+    *in the bank* across instructions, staged between ops by RowClone
+    instead of host write-backs; only program inputs, reference-constant
+    rows and the rare polarity spill cross the bus, and only program
+    *outputs* are read back.  ``True`` / ``"greedy"`` plans with the PR-3
+    greedy policy (identical command stream to the old dynamic executor);
+    ``"scheduled"`` runs the polarity/residency scheduler
+    (:func:`schedule_resident`) first — consumer-polarity De Morgan form
+    selection, pressure-ordered instructions, Belady row allocation — and
+    executes its :class:`ResidentPlan` mechanically.  ``plan=`` skips
+    planning and executes a prebuilt plan (its pinned pairs/rows must
+    refer to this ISA's module/seed).  Requires the batched executor
+    semantics (works on scalar and trial-batched sims alike) and manages
+    physical rows itself, so ``recycle`` is ignored.
     """
     t_sim = isa.trials
     if recycle is None:
         recycle = t_sim is not None
+    if plan is not None and not resident:
+        raise ValueError("plan= is a resident-execution schedule; pass "
+                         "resident=True/'greedy'/'scheduled' with it")
     if resident:
         if not batched:
             raise ValueError("resident=True requires the batched executor "
@@ -581,7 +1050,9 @@ def run_sim(prog: Program, inputs: dict[str, np.ndarray], isa: PudIsa, *,
             raise ValueError(
                 f"trials={trials} but the ISA's sim runs "
                 f"{t_sim or 1} trials; build BankSim(trials={trials})")
-        return _run_sim_resident(prog, inputs, isa)
+        policy = "greedy" if resident is True else resident
+        return _run_sim_resident(prog, inputs, isa, policy=policy,
+                                 plan=plan)
     if batched:
         if trials is not None and trials != (1 if t_sim is None else t_sim):
             raise ValueError(

@@ -128,9 +128,13 @@ class CostModel:
     (half a row per chip; x8 chips in lock-step process 8x that per rank).
     """
 
-    def __init__(self, module: ModuleConfig | None = None):
+    def __init__(self, module: ModuleConfig | None = None, *,
+                 row_bits: int | None = None):
         self.module = module or get_module()
         self.t = timings_for(self.module)
+        #: geometry override for sims built with a non-default row width
+        #: (``BankSim(row_bits=...)``); None = the module's native row
+        self.row_bits = row_bits or self.module.geometry.row_bits
 
     def _apa(self, n_rows: int, first_restored: bool) -> OpCost:
         t = self.t
@@ -150,7 +154,7 @@ class CostModel:
 
     def write_row(self) -> OpCost:
         t = self.t
-        bts = self.module.geometry.row_bits // 8
+        bts = self.row_bits // 8
         n_bursts = max(bts // 64, 1)
         return OpCost(t.tRCD + t.tWR + t.tRP + n_bursts * 4 * t.tCK,
                       ENERGY_PJ["act"] + ENERGY_PJ["pre"]
@@ -159,7 +163,7 @@ class CostModel:
 
     def read_row(self) -> OpCost:
         t = self.t
-        bts = self.module.geometry.row_bits // 8
+        bts = self.row_bits // 8
         n_bursts = max(bts // 64, 1)
         return OpCost(t.tRCD + t.tCL + t.tRP + n_bursts * 4 * t.tCK,
                       ENERGY_PJ["act"] + ENERGY_PJ["pre"]
@@ -189,9 +193,56 @@ class CostModel:
         """Processor-centric baseline: read N operand rows over the bus,
         compute on CPU, write one result row back."""
         c = self.read_row().scaled(n * rows) + self.write_row().scaled(rows)
-        bts = self.module.geometry.row_bits // 8
+        bts = self.row_bits // 8
         c.energy_pj += n * rows * (bts / 64.0) * ENERGY_PJ["cpu_op_per_64B"]
         return c
+
+    # ---- command-log twins (measured-cost reconciliation) --------------
+    # ``BankSim.log`` books each DDR4 command at *on-die* cost (no off-chip
+    # IO terms).  These methods reproduce the exact per-command (time_ns,
+    # energy_pj) constants the simulator logs, so a static
+    # ``compiler.ResidentPlan`` can predict the measured command log to the
+    # float — the reconciliation contract tests/test_scheduler.py enforces.
+    def _n_bursts(self) -> int:
+        return self.row_bits // 512   # sim-log convention (0 for tiny rows)
+
+    def log_write(self) -> tuple[float, float]:
+        t = self.t
+        return (t.tRCD + t.tWR + t.tRP,
+                ENERGY_PJ["act"] + ENERGY_PJ["pre"]
+                + self._n_bursts() * ENERGY_PJ["wr_per_64B"])
+
+    def log_read(self) -> tuple[float, float]:
+        t = self.t
+        return (t.tRCD + t.tCL + t.tRP,
+                ENERGY_PJ["act"] + ENERGY_PJ["pre"]
+                + self._n_bursts() * ENERGY_PJ["rd_per_64B"])
+
+    def log_rowclone(self) -> tuple[float, float]:
+        t = self.t
+        return (t.tRAS + VIOLATED_TRP_NS + t.tRAS + t.tRP,
+                2 * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"])
+
+    def log_frac(self) -> tuple[float, float]:
+        t = self.t
+        return (2 * (VIOLATED_TRAS_NS + t.tRP),
+                2 * (ENERGY_PJ["act"] + ENERGY_PJ["pre"]))
+
+    def log_apa(self, n_acts: int, *,
+                first_restored: bool = False) -> tuple[float, float]:
+        t = self.t
+        t_first = t.tRAS if first_restored else VIOLATED_TRAS_NS
+        return (t_first + VIOLATED_TRP_NS + t.tRAS + t.tRP,
+                n_acts * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"])
+
+    def io_adjustment(self, io_rows: int) -> tuple[float, float, int]:
+        """Off-chip burst time/energy + bus bytes for ``io_rows`` WR/RD
+        rows — the same per-row terms ``PudEngine._account_sim_log`` adds
+        on top of the on-die command log."""
+        nb = max(self.row_bits // 8 // 64, 1)
+        return (io_rows * nb * 4 * self.t.tCK,
+                io_rows * nb * ENERGY_PJ["io_per_64B"],
+                io_rows * (self.row_bits // 8))
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +256,10 @@ class IsaStats:
     fracs: int = 0
     writes: int = 0
     reads: int = 0
+    #: polarity spills: host RD round-trips of *resident* registers the
+    #: resident executor had to take (needed polarity not on the compute
+    #: side) — the quantity the compile-time scheduler minimizes
+    spills: int = 0
     cost: OpCost = field(default_factory=OpCost)
 
 
@@ -223,7 +278,7 @@ class PudIsa:
         if abs(self.f_sub - self.l_sub) != 1:
             raise ValueError("PudIsa needs neighboring subarrays")
         self.inv = inventory_for(sim.module, sim.seed)
-        self.cost_model = CostModel(sim.module)
+        self.cost_model = CostModel(sim.module, row_bits=sim.geom.row_bits)
         self.stats = IsaStats()
         lo = min(self.f_sub, self.l_sub)
         j = np.arange(sim.shared_w)
@@ -233,6 +288,9 @@ class PudIsa:
         # BankSim stripe-major layout)
         _lo, self._f_sl, self._l_sl = sim._col_slices(self.f_sub, self.l_sub)
         self._pair_cursor: dict[tuple[int, int], int] = {}
+        #: the most recent ResidentPlan executed through this ISA (set by
+        #: compiler._run_sim_resident; None until a resident run happens)
+        self.last_resident_plan = None
 
     # ---------------- word packing ----------------
     @property

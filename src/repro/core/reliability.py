@@ -73,26 +73,66 @@ class RedundancyPlan:
         return self.ops_total / 1.0
 
 
-def plan(op: str, n: int, target: float, *, max_replicas: int = 9,
+def plan(op: str | None = None, n: int | None = None,
+         target: float = 0.999999, *, max_replicas: int = 9,
          p: AnalogParams | None = None, noisy_vote: bool = True,
-         **kw) -> RedundancyPlan:
-    """Smallest odd replica count hitting ``target`` per-bit success."""
+         program=None, mc_success: float | None = None, trials: int = 200,
+         row_bits: int = 2048, seed: int = 0, module: str | None = None,
+         resident: bool | str = False, **kw) -> RedundancyPlan:
+    """Smallest odd replica count hitting ``target`` per-bit success.
+
+    Two raw-success sources:
+
+    * **per-op** (``plan("and", 16, target)``): the closed-form calibrated
+      model at the best (compute, reference) region placement — one native
+      APA per replica.
+    * **per-program** (``plan(target=..., program="add4")`` or a compiled
+      :class:`~repro.core.compiler.Program`): the *measured* program-level
+      Monte-Carlo success from :func:`charz.mc_program_success` (same
+      ``trials``/``seed``/``module``/``resident`` knobs), so replica
+      counts follow whole-program error propagation instead of the
+      pessimistic independent-op product — each replica then costs the
+      program's native op count.  ``mc_success`` injects a pre-measured
+      success rate (skips the MC).
+
+    The vote tree is the same in both modes: in-DRAM MAJ3 cascades whose
+    own ops succeed at the closed-form 2-input AND rate of the chosen
+    placement (``noisy_vote``).
+    """
     p = p or A.DEFAULT_PARAMS
-    rc, rr, p_raw = best_regions(op, n, p=p, **kw)
+    if program is not None:
+        from . import charz
+        prog = charz.get_program(program) if isinstance(program, str) \
+            else program
+        p_raw = mc_success if mc_success is not None else \
+            charz.mc_program_success(prog, trials=trials, row_bits=row_bits,
+                                     seed=seed, module=module,
+                                     resident=resident)
+        ops_each = sum(1 for i in prog.instrs
+                       if i.op not in ("input", "const"))
+        name = program if isinstance(program, str) else f"<{ops_each} ops>"
+        op_label, n_eff = f"program:{name}", ops_each
+        rc, rr, _ = best_regions("and", 2, p=p, **kw)
+    else:
+        if op is None or n is None:
+            raise ValueError("plan() needs (op, n) or program=")
+        rc, rr, p_raw = best_regions(op, n, p=p, **kw)
+        op_label, n_eff, ops_each = op, n, 1
     p_vote = A.boolean_success_avg("and", 2, p=p, compute_region=rc,
                                    ref_region=rr, **kw)
-    r, pf, ops = 1, p_raw, 1
+    r, pf, ops = 1, p_raw, ops_each
     for r in range(1, max_replicas + 1, 2):
         pf = (vote_success_with_noisy_vote(p_raw, r, p_vote)
               if (noisy_vote and r > 1) else vote_success(p_raw, r))
-        ops = r + (0 if r == 1 else 4 * (r // 2))   # MAJ3 cascade
+        # r replicas + the MAJ3 cascade joining them (4 native ops each)
+        ops = r * ops_each + (0 if r == 1 else 4 * (r // 2))
         if pf >= target:
-            return RedundancyPlan(op, n, r, rc, rr, p_raw, pf, ops)
+            return RedundancyPlan(op_label, n_eff, r, rc, rr, p_raw, pf, ops)
     # unreachable target: fall back to the largest candidate *as evaluated
     # in the loop* — with noisy_vote=True the old fallback used the ideal
     # vote_success formula, overstating p_final relative to every
     # candidate it had just rejected
-    return RedundancyPlan(op, n, r, rc, rr, p_raw, pf, ops)
+    return RedundancyPlan(op_label, n_eff, r, rc, rr, p_raw, pf, ops)
 
 
 def cell_mask(success_map: np.ndarray, threshold: float = 0.999) -> np.ndarray:

@@ -129,7 +129,8 @@ class PudEngine:
     DRAM_MIN_PAIR_SWEEP = 4
 
     def __init__(self, backend: str = "jnp", *, module: str | None = None,
-                 noisy: bool = False, seed: int = 0, resident: bool = False):
+                 noisy: bool = False, seed: int = 0,
+                 resident: bool | str = False, chain_blocks: bool = True):
         assert backend in BACKENDS, backend
         self.backend = backend
         self.module = get_module(module) if module else get_module()
@@ -139,8 +140,15 @@ class PudEngine:
         self.seed = seed
         #: dram backend: run compiled programs through the resident-register
         #: executor (intermediates chain in-bank via RowClone) instead of
-        #: the host-staged reference path
+        #: the host-staged reference path.  ``True``/``"greedy"`` executes
+        #: the PR-3 greedy plan; ``"scheduled"`` runs the compile-time
+        #: polarity/residency scheduler first (fewer polarity spills)
         self.resident = resident
+        #: resident mode: chain residency across chunk *blocks* — the
+        #: in-bank constant rows block k leaves behind feed block k+1 via
+        #: RowClone instead of fresh host writes (``False`` restores the
+        #: PR-3 per-block restaging for comparison)
+        self.chain_blocks = chain_blocks
         self._isa: PudIsa | None = None
         self._batched_isa: dict[int, PudIsa] = {}
         #: per-block noise-stream derivation (chip identity stays ``seed``)
@@ -154,7 +162,7 @@ class PudEngine:
         """A fresh, deterministic noise-stream seed for the next block."""
         return int(self._seed_seq.spawn(1)[0].generate_state(1, np.uint64)[0])
 
-    def _isa_for(self, n_chunks: int) -> PudIsa:
+    def _isa_for(self, n_chunks: int, *, recycle: bool = True) -> PudIsa:
         """ISA for one chunk block: a trial-batched BankSim with
         ``n_chunks`` trials (cached per batch size; single-chunk work uses
         the scalar sim).  Each call dedicates an independent noise stream
@@ -162,7 +170,9 @@ class PudEngine:
         batch size, so without reseeding, equal-trial blocks of different
         calls (and the leading trials of different-size blocks) would draw
         identical error patterns.  Row slots are recycled so the working
-        set stays bounded by one op's rows."""
+        set stays bounded by one op's rows; ``recycle=False`` preserves
+        them (cross-block residency: a later block RowClones constant rows
+        an earlier block of the same size left in the bank)."""
         if n_chunks <= 1:
             isa = self._isa
         else:
@@ -173,7 +183,8 @@ class PudEngine:
                 self._batched_isa[n_chunks] = PudIsa(sim)
             isa = self._batched_isa[n_chunks]
         isa.sim.reseed_noise(self._next_noise_seed())
-        isa.sim.recycle_rows()
+        if recycle:
+            isa.sim.recycle_rows()
         return isa
 
     # ------------- accounting -------------
@@ -352,8 +363,16 @@ class PudEngine:
         block of row chunks runs the whole program as one trial-batched
         ``compiler.run_sim`` episode — host-staged by default, or through
         the resident-register executor when the engine was built with
-        ``resident=True`` (intermediates then chain in-bank via RowClone
-        and only program outputs cross the bus)."""
+        ``resident=True`` / ``"scheduled"`` (intermediates then chain
+        in-bank via RowClone and only program outputs cross the bus).
+
+        Resident mode additionally chains residency across blocks
+        (``chain_blocks``): blocks of one size share a
+        ``compiler.ResidentSession``, so the reference/identity constant
+        rows block k staged stay in the bank and block k+1 RowClones them
+        instead of paying fresh host writes.  Every block still gets its
+        own noise stream (``reseed_noise``) — persistent rows change what
+        the host *writes*, not what the chip *draws*."""
         r, c = shape
         n_bits = r * c * 32
         w = self._isa.width
@@ -363,18 +382,25 @@ class PudEngine:
         n_chunks = -(-n_bits // w)
         blk_sz = self._block_size(n_chunks)
         pieces: dict[str, list[np.ndarray]] = {k: [] for k in prog.outputs}
+        chain = bool(self.resident) and self.chain_blocks
+        policy = "greedy" if self.resident is True else self.resident
+        sessions: dict[int, CC.ResidentSession] = {}
         for lo in range(0, n_chunks, blk_sz):
             blk = {name: ch[lo:lo + blk_sz] for name, ch in chunks.items()}
             t = next(iter(blk.values())).shape[0]
-            isa = self._isa_for(t)
+            isa = self._isa_for(t, recycle=not (chain and t in sessions))
             before = self._log_snapshot(isa.sim)
-            if t == 1:
-                res = CC.run_sim(prog, {k: v[0] for k, v in blk.items()},
-                                 isa, resident=self.resident)
-                res = {k: v[None] for k, v in res.items()}
+            ins = {k: v[0] for k, v in blk.items()} if t == 1 else blk
+            if chain:
+                sess = sessions.get(t)
+                if sess is None:
+                    sess = sessions[t] = CC.ResidentSession(prog, isa,
+                                                            policy=policy)
+                res = sess.run(ins)
             else:
-                res = CC.run_sim(prog, blk, isa,     # (t, w) planes
-                                 resident=self.resident)
+                res = CC.run_sim(prog, ins, isa, resident=self.resident)
+            if t == 1:
+                res = {k: v[None] for k, v in res.items()}
             self._account_sim_log(isa.sim, before)
             for name in pieces:
                 pieces[name].append(res[name])

@@ -207,6 +207,120 @@ def test_plan_unreachable_target_uses_noisy_vote_fallback():
 
 
 # ---------------------------------------------------------------------------
+# cross-block residency (PudEngine chain_blocks)
+# ---------------------------------------------------------------------------
+def _multi_block_planes(rng, names):
+    """19200-bit planes -> 5 row chunks on the default module -> blocks of
+    sizes (2, 2, 1): two equal-size blocks exercise the chained session."""
+    import jax.numpy as jnp
+    return {n: jnp.asarray(rng.integers(0, 2 ** 32, (2, 300),
+                                        dtype=np.uint32)) for n in names}
+
+
+@pytest.mark.parametrize("policy", [True, "scheduled"])
+def test_cross_block_residency_cuts_host_writes(policy):
+    """A program wider than one block: chained residency produces identical
+    results with strictly fewer host-write bytes than per-block restaging
+    (block k+1 RowClones the constant rows block k left in the bank)."""
+    from repro.pud.engine import PudEngine
+    prog = charz.get_program("xor")
+    rng = np.random.default_rng(7)
+    planes = _multi_block_planes(rng, ("a", "b"))
+    want = np.asarray(planes["a"] ^ planes["b"])
+    staged = {}
+    for chain in (False, True):
+        eng = PudEngine("dram", noisy=False, resident=policy,
+                        chain_blocks=chain)
+        out = eng.run_program(prog, dict(planes))
+        assert (np.asarray(out["out"]) == want).all(), chain
+        staged[chain] = eng.report.staged_bytes
+    assert staged[True] < staged[False], staged
+
+
+def test_cross_block_residency_reseeds_noise_per_block(monkeypatch):
+    """Regression: chaining must not suppress the per-block noise-stream
+    derivation — every block still gets a distinct reseed."""
+    from repro.core.simulator import BankSim as BS
+    from repro.pud.engine import PudEngine
+    seen = []
+    orig = BS.reseed_noise
+
+    def spy(self, noise_seed):
+        seen.append(int(noise_seed))
+        return orig(self, noise_seed)
+
+    monkeypatch.setattr(BS, "reseed_noise", spy)
+    prog = charz.get_program("xor")
+    rng = np.random.default_rng(8)
+    planes = _multi_block_planes(rng, ("a", "b"))
+    eng = PudEngine("dram", noisy=True, resident=True)
+    eng.run_program(prog, planes)
+    assert len(seen) == 3                      # blocks (2, 2, 1)
+    assert len(set(seen)) == len(seen)         # all streams distinct
+
+
+def test_cross_block_chained_blocks_draw_independent_errors():
+    """Two chained blocks fed identical chunk data must not repeat error
+    patterns (the per-block reseed keeps streams independent even though
+    in-bank rows persist)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+    from repro.pud.engine import PudEngine
+    prog = charz.get_program("xor")
+    w = PudEngine("dram").module.geometry.shared_bits
+    rng = np.random.default_rng(9)
+    chunk = rng.integers(0, 2, w).astype(np.uint8)
+    bits = np.tile(chunk, 2)                   # 2 identical row chunks
+    planes = {"a": kops.ref.pack_bits(jnp.asarray(bits.reshape(1, -1))),
+              "b": kops.ref.pack_bits(jnp.asarray(
+                  np.zeros_like(bits).reshape(1, -1)))}
+    eng = PudEngine("dram", noisy=True, resident=True)
+    out = np.asarray(kops.ref.unpack_bits(
+        eng.run_program(prog, planes)["out"])).reshape(-1)
+    errs = (out != bits).reshape(2, w)
+    assert errs.any()                          # noisy mode does flip bits
+    assert not np.array_equal(errs[0], errs[1])
+
+
+# ---------------------------------------------------------------------------
+# reliability.plan program= path (per-program replica counts)
+# ---------------------------------------------------------------------------
+def test_plan_program_path_pins_to_per_op_answer():
+    """A single-op program with the per-op raw success injected must yield
+    the per-op plan exactly (same replicas / p_final / ops accounting)."""
+    from repro.core import reliability as R
+    target = 0.999999
+    per_op = R.plan("and", 2, target)
+    single = CC.compile_expr(CC.And([CC.Var("a"), CC.Var("b")]))
+    per_prog = R.plan(target=target, program=single,
+                      mc_success=per_op.p_raw)
+    assert per_prog.op == "program:<1 ops>"
+    assert (per_prog.replicas, per_prog.p_final, per_prog.ops_total) \
+        == (per_op.replicas, per_op.p_final, per_op.ops_total)
+    assert (per_prog.compute_region, per_prog.ref_region) \
+        == (per_op.compute_region, per_op.ref_region)
+
+
+def test_plan_program_path_backed_by_mc(mc_trials):
+    """The default program path measures charz.mc_program_success and
+    scales the per-replica op cost by the program's native op count."""
+    from repro.core import analog as A
+    from repro.core import reliability as R
+    t = mc_trials(54, 27)
+    p_raw = charz.mc_program_success("maj3", trials=t, seed=3)
+    pl = R.plan(target=0.999999, program="maj3", trials=t, seed=3)
+    assert pl.p_raw == pytest.approx(p_raw)    # same measurement, same seed
+    assert pl.op == "program:maj3" and pl.n == 4
+    rc, rr, _ = R.best_regions("and", 2)
+    p_vote = A.boolean_success_avg("and", 2, compute_region=rc,
+                                   ref_region=rr)
+    want = R.vote_success_with_noisy_vote(p_raw, pl.replicas, p_vote)
+    assert pl.p_final == pytest.approx(want)
+    # r replicas of a 4-op program + the MAJ3 cascade
+    assert pl.ops_total == pl.replicas * 4 + 4 * (pl.replicas // 2)
+
+
+# ---------------------------------------------------------------------------
 # engine metering (bugfix + resident mode)
 # ---------------------------------------------------------------------------
 def test_add_ops_bits_backend_invariant():
