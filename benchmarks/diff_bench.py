@@ -1,10 +1,16 @@
-"""Diff success-rate keys between two BENCH_*.json snapshots.
+"""Diff success-rate and counter keys between two BENCH_*.json snapshots.
 
 Guards the nightly characterization lane: the fresh snapshot's Monte-Carlo
 success rates (raw-op *and* program-level) must not regress by more than
 ``--tol`` percentage points against the committed per-PR baseline.  Pure
 timing keys are reported but never fail the diff (CI hosts vary); success
 rates are physics — they only move if the model or the executor changed.
+
+Scheduler *counter* keys (``resident_v2.*`` polarity spills and staged
+bytes) are gated exactly: they are deterministic planner outputs, so any
+increase over the baseline fails the diff — the add4 scheduled plan must
+stay at 0 host polarity spills and chained runs must not regain host-write
+bytes.
 
 Usage:
     python -m benchmarks.diff_bench NEW.json [BASELINE.json] [--tol 2.0]
@@ -31,11 +37,23 @@ def _success_keys(snap: dict) -> dict[str, float]:
             ("resident_detail", "resident",
              ("staged_success", "resident_success")),
             ("scheduled_detail", "scheduled",
+             ("scheduled_success",)),
+            ("resident_v2_detail", "resident_v2",
              ("scheduled_success",))):
         for name, d in snap.get(section, {}).items():
             for kind in kinds:
                 if kind in d:
                     out[f"{prefix}.{name}.{kind}"] = float(d[kind])
+    return out
+
+
+def _counter_keys(snap: dict) -> dict[str, float]:
+    """Deterministic planner counters gated exactly (fail on increase)."""
+    out: dict[str, float] = {}
+    for name, d in snap.get("resident_v2_detail", {}).items():
+        for kind in ("scheduled_spills", "chained_staged_bytes"):
+            if kind in d:
+                out[f"resident_v2.{name}.{kind}"] = float(d[kind])
     return out
 
 
@@ -63,10 +81,20 @@ def diff(new: dict, base: dict, tol_pts: float) -> list[str]:
         if delta < -tol_pts:
             msgs.append(f"{key} regressed {delta:+.2f} pts "
                         f"(tolerance {tol_pts})")
-    only_new = sorted(set(nk) - set(bk))
+    # exact counter gates: planner outputs are deterministic, so any
+    # increase (more spills, more chained host-write bytes) is a real
+    # scheduler regression, not sampling noise
+    nc, bc = _counter_keys(new), _counter_keys(base)
+    for key in sorted(set(nc) & set(bc)):
+        status = "REGRESSION" if nc[key] > bc[key] else "ok"
+        print(f"{status:>10}  {key}: {bc[key]:.0f} -> {nc[key]:.0f}")
+        if nc[key] > bc[key]:
+            msgs.append(f"{key} increased {bc[key]:.0f} -> {nc[key]:.0f} "
+                        "(counter keys are gated exactly)")
+    only_new = sorted((set(nk) - set(bk)) | (set(nc) - set(bc)))
     if only_new:
         print(f"new metrics (no baseline): {', '.join(only_new)}")
-    missing = sorted(set(bk) - set(nk))
+    missing = sorted((set(bk) - set(nk)) | (set(bc) - set(nc)))
     if missing:
         # a silently-vanished metric must not read as "no regression"
         msgs.append("baseline metrics missing from the new snapshot: "

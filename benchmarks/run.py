@@ -11,6 +11,9 @@ Prints CSV sections:
     intermediates: host-write bus-byte reduction at matched success),
   * scheduled vs greedy resident execution (compile-time polarity
     scheduling: polarity-spill reduction at matched success),
+  * resident v2 (duplication-not-spill + pinned inputs): zero add4
+    polarity spills at the native row geometry and strictly fewer
+    chained host-write bytes than the PR-4 sessions,
   * in-DRAM vs CPU cost model (the paper's motivation, Table-style),
   * kernel micro-benchmarks (packed-op throughput on this host),
   * PuD-engine offload accounting on LM workloads.
@@ -18,7 +21,7 @@ Prints CSV sections:
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]
 
 ``--json`` additionally writes machine-readable timings + success-rate
-deltas (default path BENCH_pr4.json) so CI can archive the trajectory;
+deltas (default path BENCH_pr5.json) so CI can archive the trajectory;
 ``benchmarks.diff_bench`` compares snapshots across PRs/nightlies.
 """
 from __future__ import annotations
@@ -409,6 +412,119 @@ def scheduled_vs_greedy(fast=False):
     return red4
 
 
+def resident_v2(fast=False):
+    """Resident compilation v2: duplication-not-spill + pinned inputs.
+
+    Three measurements per program, all PR-5 acceptance quantities:
+
+    * **plan @ native geometry** — the scheduled plan at the module's
+      real row width (the geometry the engine runs): polarity spills
+      must hit 0 on add4 with the conflicts converted to dual-form
+      producer duplications, at lower CostModel energy than both the
+      greedy plan and the spill alternative (the cost-gate contract),
+    * **chained multi-block engine run** — host-write bytes of the new
+      default (`PudEngine("dram")` = scheduled resident, sessions with
+      pinned inputs) vs the PR-4 behavior (scheduled sessions without
+      duplication/pinning) on the same planes: strictly fewer bytes,
+    * **Monte-Carlo success** — `resident="scheduled"` at the PR-4
+      benchmark config (matched-success evidence for the diff gate).
+    """
+    import jax.numpy as jnp
+    from repro.core import charz
+    from repro.core import compiler as CC
+    from repro.core.isa import PudIsa
+    from repro.core.simulator import BankSim
+    from repro.pud.engine import PudEngine
+
+    trials = {"xor": 216, "maj3": 216, "add4": 54 if fast else 108}
+    rows = []
+    detail = {}
+    rng = np.random.default_rng(17)
+    for name, tr in trials.items():
+        prog = charz.get_program(name)
+        # --- scheduled plan at the native row geometry ---
+        plans = {}
+        for policy in ("greedy", "scheduled"):
+            isa = PudIsa(BankSim(error_model="ideal", seed=0))
+            plans[policy] = CC.schedule_resident(prog, isa, policy=policy)
+        g, s = plans["greedy"], plans["scheduled"]
+        isa = PudIsa(BankSim(error_model="ideal", seed=0))
+        spill_alt = CC.schedule_resident(
+            prog, isa, policy="scheduled",
+            _fixed=(s.order, s.demorgan, {}, False))
+        # --- chained multi-block engine run: v2 vs PR-4 behavior ---
+        names = sorted({i.name for i in prog.instrs if i.op == "input"})
+        planes = {n: jnp.asarray(rng.integers(0, 2 ** 32, (2, 600),
+                                              dtype=np.uint32))
+                  for n in names}            # 38400 bits -> 10 chunks
+        eng = PudEngine("dram", noisy=False)          # v2 default
+        out_v2 = eng.run_program(prog, dict(planes))
+        staged_v2 = eng.report.staged_bytes
+        # PR-4 behavior: scheduled sessions without duplication/pinning,
+        # on the exact chunk-block partition the engine used (reuse the
+        # engine's own chunking so a DRAM_CHUNK_BATCH/DRAM_MIN_PAIR_SWEEP
+        # change cannot silently desynchronize the comparison)
+        from repro.kernels import ops as kops
+        w = eng._isa.width
+        bits = {n: PudEngine._to_chunks(
+            np.asarray(kops.ref.unpack_bits(p)).reshape(-1), w)
+            for n, p in planes.items()}
+        n_chunks = bits[names[0]].shape[0]
+        blk_sz = eng._block_size(n_chunks)
+        staged_pr4 = 0
+        sess4: dict[int, CC.ResidentSession] = {}
+        for lo in range(0, n_chunks, blk_sz):
+            blk = {n: b[lo:lo + blk_sz] for n, b in bits.items()}
+            t = blk[names[0]].shape[0]
+            if t not in sess4:
+                sim = BankSim(error_model="ideal", seed=0,
+                              trials=t if t > 1 else None,
+                              track_unshared=False)
+                sess4[t] = CC.ResidentSession(
+                    prog, PudIsa(sim), policy="scheduled",
+                    pin_inputs=False, duplicate=False)
+            sim = sess4[t].isa.sim
+            wr0 = sim.log.counts.get("WR", 0)
+            sess4[t].run({k: v[0] for k, v in blk.items()} if t == 1
+                         else blk)
+            staged_pr4 += (sim.log.counts.get("WR", 0) - wr0) \
+                * (sim.geom.row_bits // 8)
+        # --- MC success at the PR-4 benchmark config ---
+        succ = float(charz.mc_program_success(name, trials=tr, seed=0,
+                                              resident="scheduled"))
+        rows.append((name, g.polarity_spills, s.polarity_spills,
+                     s.duplications, round(s.cost().energy_pj / 1e3, 1),
+                     round(spill_alt.cost().energy_pj / 1e3, 1),
+                     staged_v2, staged_pr4, round(100 * succ, 2)))
+        detail[name] = {
+            "greedy_spills": g.polarity_spills,
+            "scheduled_spills": s.polarity_spills,
+            "duplications": s.duplications,
+            "plan_energy_nJ": s.cost().energy_pj / 1e3,
+            "spill_alt_energy_nJ": spill_alt.cost().energy_pj / 1e3,
+            "chained_staged_bytes": staged_v2,
+            "pr4_staged_bytes_3blocks": staged_pr4,
+            "scheduled_success": succ,
+        }
+        out_ref = PudEngine("jnp").run_program(prog, dict(planes))
+        for k in prog.outputs:
+            assert (np.asarray(out_v2[k]) == np.asarray(out_ref[k])).all()
+    _csv("Resident v2: duplication-not-spill + pinned inputs "
+         "(native geometry)",
+         rows,
+         "program,greedy_spills,sched_spills,duplications,plan_nJ,"
+         "spill_alt_nJ,chained_staged_B,pr4_staged_B,sched_succ")
+    add4 = detail["add4"]
+    _p(f"add4 scheduled spills at native geometry: "
+       f"{add4['scheduled_spills']} (target 0, "
+       f"{add4['duplications']} duplications); chained staged bytes "
+       f"{add4['chained_staged_bytes']} vs PR-4 "
+       f"{add4['pr4_staged_bytes_3blocks']}")
+    RESULTS["resident_v2_detail"] = detail
+    RESULTS["resident_v2_add4_spills"] = add4["scheduled_spills"]
+    return add4["scheduled_spills"]
+
+
 def calibration_scorecard():
     from repro.core import analog as A
     from repro.core import calibrate as C
@@ -508,7 +624,7 @@ def _json_path(argv) -> str | None:
     i = argv.index("--json")
     if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
         return argv[i + 1]
-    return "BENCH_pr4.json"
+    return "BENCH_pr5.json"
 
 
 def main() -> None:
@@ -530,6 +646,7 @@ def main() -> None:
     program_mc_speedup(fast=fast)
     resident_vs_staged(fast=fast)
     scheduled_vs_greedy(fast=fast)
+    resident_v2(fast=fast)
     calibration_scorecard()
     cost_model_table()
     reliability_planning()

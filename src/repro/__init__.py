@@ -1,0 +1,2 @@
+"""fcdram-repro: 'Functionally-Complete Boolean Logic in Real DRAM Chips'
+grown into a jax/pallas processing-using-DRAM framework."""

@@ -322,16 +322,20 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
     execution per trial on a scalar sim (same statistic; the walk then
     advances every instruction of every trial).
 
-    ``resident=True`` (or ``"greedy"``) routes execution through the
-    resident-register executor (RowClone-chained intermediates) instead of
-    the host-staged path — the same statistic over a different command
-    stream (requires ``batched=True``; rows are recycled between groups,
-    not mid-program).  ``resident="scheduled"`` additionally runs the
-    compile-time polarity/residency scheduler; the (order, form) search
-    runs once and later groups replan with the frozen decisions while the
-    activation-pair walk keeps sweeping.
+    ``resident`` routes execution through the resident-register executor
+    (RowClone-chained intermediates) instead of the host-staged path —
+    the same statistic over a different command stream (requires
+    ``batched=True``; rows are recycled between groups, not mid-program).
+    ``True`` / ``"scheduled"`` run the compile-time polarity/residency
+    scheduler (the engine-default policy): the (order, form, duplication)
+    search runs once — memoized per (program, isa geometry) by
+    ``compiler.schedule_resident`` — and later groups replan with the
+    frozen decisions while the activation-pair walk keeps sweeping;
+    ``"greedy"`` keeps the PR-3 reference stream.
     """
     prog = get_program(program) if isinstance(program, str) else program
+    if resident is True:
+        resident = "scheduled"
     names = sorted({i.name for i in prog.instrs if i.op == "input"})
     rng = np.random.default_rng(seed + 1)
     ok = 0
@@ -345,16 +349,15 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
                       temp_c=temp_c, error_model="analog", trials=tg,
                       track_unshared=False)
         isa = PudIsa(sim)
-        sched_fixed = None
         for _g in range(groups):
             plan = None
             if resident:
                 sim.recycle_rows()   # resident runs re-stage all state
                 if resident == "scheduled":
+                    # the search result is cached: group 1 pays it, later
+                    # groups (and later calls) replan with frozen decisions
                     plan = CC.schedule_resident(prog, isa,
-                                                policy="scheduled",
-                                                _fixed=sched_fixed)
-                    sched_fixed = (plan.order, plan.demorgan)
+                                                policy="scheduled")
             ins = {n: _random_bits(rng, (tg, isa.width)) for n in names}
             got = CC.run_sim(prog, ins, isa, trials=tg, resident=resident,
                              plan=plan)

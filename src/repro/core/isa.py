@@ -126,6 +126,21 @@ class CostModel:
 
     All in-DRAM ops are row-granular: one op processes ``shared_w`` bits
     (half a row per chip; x8 chips in lock-step process 8x that per rank).
+
+    The ``log_*`` twins reproduce the exact per-command constants the
+    simulator books into ``BankSim.log``, which is what lets a static
+    :class:`~repro.core.compiler.ResidentPlan` predict the measured
+    command log to the float — and what adjudicates the scheduler's
+    duplication-vs-spill decisions (bus movement dominates energy at the
+    native row width, so in-bank APAs usually win):
+
+    >>> cm = CostModel()                      # native 8192-bit rows
+    >>> spill = cm.log_read()[1] + cm.log_write()[1] \\
+    ...     + cm.io_adjustment(2)[1]          # RD + WR + off-chip bursts
+    >>> dup = (3 * cm.log_rowclone()[1] + cm.log_frac()[1]
+    ...        + cm.log_apa(4)[1])            # all-in-bank 2-input dual op
+    >>> dup < spill
+    True
     """
 
     def __init__(self, module: ModuleConfig | None = None, *,
@@ -260,6 +275,9 @@ class IsaStats:
     #: resident executor had to take (needed polarity not on the compute
     #: side) — the quantity the compile-time scheduler minimizes
     spills: int = 0
+    #: producer duplications: extra in-bank APAs the scheduled planner
+    #: took *instead of* polarity spills (dual De Morgan re-execution)
+    duplications: int = 0
     cost: OpCost = field(default_factory=OpCost)
 
 

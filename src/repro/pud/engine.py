@@ -33,14 +33,19 @@ instruction on whole packed planes; dram runs the trial-batched program
 executor (``compiler.run_sim``) per chunk block.  ``add`` routes in-DRAM
 arithmetic the same way.
 
-``PudEngine("dram", resident=True)`` switches program execution to the
-*resident-register* executor: intermediates chain in-bank via RowClone
-instead of round-tripping through the host between instructions, so the
-``OffloadReport`` books RowClones (``report.rowclones``) in place of most
-host staging writes (``report.staged_bytes``) — the host-staged path stays
-the default reference.  On the dram backend the report's dram-side cost is
-*measured* from the simulator's command log rather than modeled, so both
-modes are compared on the commands they actually issued.
+Program execution on the dram backend defaults to the **scheduled
+resident-register** executor (``resident="scheduled"``): intermediates
+chain in-bank via RowClone instead of round-tripping through the host
+between instructions, the compile-time scheduler converts polarity spills
+into dual-form producer duplications, and chunk blocks chain through
+``ResidentSession`` (constant rows + pinned input words stay in the bank
+between blocks).  The ``OffloadReport`` books RowClones
+(``report.rowclones``) in place of most host staging writes
+(``report.staged_bytes``).  ``resident="greedy"`` is the bit-for-bit PR-3
+resident reference and ``resident=False`` the host-staged reference path.
+On the dram backend the report's dram-side cost is *measured* from the
+simulator's command log rather than modeled, so all modes are compared on
+the commands they actually issued.
 """
 from __future__ import annotations
 
@@ -130,7 +135,8 @@ class PudEngine:
 
     def __init__(self, backend: str = "jnp", *, module: str | None = None,
                  noisy: bool = False, seed: int = 0,
-                 resident: bool | str = False, chain_blocks: bool = True):
+                 resident: bool | str | None = None,
+                 chain_blocks: bool = True):
         assert backend in BACKENDS, backend
         self.backend = backend
         self.module = get_module(module) if module else get_module()
@@ -138,11 +144,21 @@ class PudEngine:
         self.report = OffloadReport()
         self.noisy = noisy
         self.seed = seed
-        #: dram backend: run compiled programs through the resident-register
-        #: executor (intermediates chain in-bank via RowClone) instead of
-        #: the host-staged reference path.  ``True``/``"greedy"`` executes
-        #: the PR-3 greedy plan; ``"scheduled"`` runs the compile-time
-        #: polarity/residency scheduler first (fewer polarity spills)
+        #: dram backend: how compiled programs execute.  Default (None):
+        #: the *scheduled* resident-register executor — intermediates
+        #: chain in-bank via RowClone under the compile-time polarity/
+        #: residency scheduler (duplication instead of polarity spills,
+        #: pinned input words across chunk blocks); the ~0.5 s planning
+        #: pass amortizes through a frozen-decision cache keyed on
+        #: (program, isa geometry).  ``"greedy"`` is the bit-for-bit PR-3
+        #: resident reference; ``False`` is the host-staged reference
+        #: path; ``True`` maps to ``"scheduled"``.
+        if resident is None:
+            resident = "scheduled" if backend == "dram" else False
+        elif resident is True:
+            resident = "scheduled"
+        if resident not in (False, "greedy", "scheduled"):
+            raise ValueError(f"unknown resident mode {resident!r}")
         self.resident = resident
         #: resident mode: chain residency across chunk *blocks* — the
         #: in-bank constant rows block k leaves behind feed block k+1 via
@@ -316,9 +332,26 @@ class PudEngine:
         returns one plane per program output.  jnp/pallas execute each
         instruction on whole planes; the dram backend splits the planes
         into row chunks and runs the trial-batched program executor
-        (``compiler.run_sim``) one chunk block at a time.  Every compute
+        (``compiler.run_sim``) one chunk block at a time — by default
+        through the *scheduled resident-register* executor, with chunk
+        blocks of one size chained through a
+        :class:`~repro.core.compiler.ResidentSession` (in-bank constant
+        rows and pinned input words carry between blocks).  Every compute
         instruction is metered into the :class:`OffloadReport` (operand
-        staging is not; it is counted in ``Program.cost``)."""
+        staging is not; it is counted in ``Program.cost``).
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import compiler as CC
+        >>> from repro.pud.engine import PudEngine
+        >>> prog = CC.compile_expr(CC.Xor(CC.Var("a"), CC.Var("b")))
+        >>> eng = PudEngine("jnp")
+        >>> a = jnp.asarray([[5]], jnp.uint32)
+        >>> b = jnp.asarray([[3]], jnp.uint32)
+        >>> int(eng.run_program(prog, {"a": a, "b": b})["out"][0, 0])
+        6
+        >>> eng.report.ops                      # 4 NANDs were metered
+        4
+        """
         if not planes:
             raise ValueError("run_program needs at least one input plane")
         named = {k: jnp.asarray(v, jnp.uint32) for k, v in planes.items()}
@@ -361,18 +394,21 @@ class PudEngine:
     def _dram_run_program(self, prog: CC.Program, planes, shape):
         """Chunk-blocked program execution on the DRAM simulator: each
         block of row chunks runs the whole program as one trial-batched
-        ``compiler.run_sim`` episode — host-staged by default, or through
-        the resident-register executor when the engine was built with
-        ``resident=True`` / ``"scheduled"`` (intermediates then chain
-        in-bank via RowClone and only program outputs cross the bus).
+        ``compiler.run_sim`` episode — through the scheduled resident-
+        register executor by default (intermediates chain in-bank via
+        RowClone and only program outputs cross the bus), host-staged
+        when the engine was built with ``resident=False``.
 
         Resident mode additionally chains residency across blocks
         (``chain_blocks``): blocks of one size share a
         ``compiler.ResidentSession``, so the reference/identity constant
         rows block k staged stay in the bank and block k+1 RowClones them
-        instead of paying fresh host writes.  Every block still gets its
-        own noise stream (``reseed_noise``) — persistent rows change what
-        the host *writes*, not what the chip *draws*."""
+        instead of paying fresh host writes — and under the scheduled
+        policy the session also *pins input words*: a block whose input
+        word equals the previous block's (e.g. a broadcast operand)
+        RowClones the pinned row instead of re-staging it.  Every block
+        still gets its own noise stream (``reseed_noise``) — persistent
+        rows change what the host *writes*, not what the chip *draws*."""
         r, c = shape
         n_bits = r * c * 32
         w = self._isa.width
@@ -383,7 +419,7 @@ class PudEngine:
         blk_sz = self._block_size(n_chunks)
         pieces: dict[str, list[np.ndarray]] = {k: [] for k in prog.outputs}
         chain = bool(self.resident) and self.chain_blocks
-        policy = "greedy" if self.resident is True else self.resident
+        policy = self.resident
         sessions: dict[int, CC.ResidentSession] = {}
         for lo in range(0, n_chunks, blk_sz):
             blk = {name: ch[lo:lo + blk_sz] for name, ch in chunks.items()}

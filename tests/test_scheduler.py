@@ -143,7 +143,7 @@ def test_static_cost_reconciles_with_command_log(program, policy, trials):
                                            rel=1e-9)
 
 
-@pytest.mark.parametrize("policy", [True, "scheduled"])
+@pytest.mark.parametrize("policy", ["greedy", "scheduled"])
 def test_offload_report_matches_plan(policy):
     """Engine-level parity: one single-block resident run_program books
     exactly the planned command stream into the OffloadReport."""

@@ -1,0 +1,93 @@
+"""Markdown link/anchor checker for README.md and docs/.
+
+Validates every ``[text](target)`` link in the repo's user-facing docs:
+
+* relative file targets must exist (``docs/...``, ``src/...``, ...),
+* ``#anchor`` fragments must match a heading slug in the target file
+  (GitHub slug rules: lowercase, punctuation stripped, spaces -> dashes),
+* bare ``#anchor`` links resolve against the containing file,
+* ``http(s)://`` links are reported but not fetched (CI has no network
+  guarantees); obviously malformed ones (spaces) fail.
+
+Run from the repository root:  python tools/check_docs.py
+Exit status 1 on any broken link/anchor — the CI docs-check gate.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+(?:\s+\"[^\"]*\")?)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug of one markdown heading."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(md_path: pathlib.Path) -> set[str]:
+    text = CODE_FENCE_RE.sub("", md_path.read_text())
+    slugs: dict[str, int] = {}
+    out = set()
+    for m in HEADING_RE.finditer(text):
+        slug = slugify(m.group(1))
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_file(md_path: pathlib.Path, root: pathlib.Path) -> list[str]:
+    errors = []
+    text = CODE_FENCE_RE.sub("", md_path.read_text())
+    for m in LINK_RE.finditer(text):
+        target = m.group(1).split('"')[0].strip()
+        if target.startswith(("http://", "https://", "mailto:")):
+            if " " in target:
+                errors.append(f"{md_path}: malformed URL {target!r}")
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = (md_path.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md_path}: broken link -> {target}")
+                continue
+        else:
+            dest = md_path
+        if anchor:
+            if dest.suffix.lower() not in (".md", ".markdown"):
+                continue
+            if slugify(anchor) not in heading_slugs(dest):
+                errors.append(
+                    f"{md_path}: missing anchor #{anchor} in "
+                    f"{dest.relative_to(root)}")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("**/*.md"))
+    errors = []
+    n_links = 0
+    for f in files:
+        if not f.exists():
+            errors.append(f"missing doc file: {f}")
+            continue
+        n_links += len(LINK_RE.findall(CODE_FENCE_RE.sub("",
+                                                         f.read_text())))
+        errors.extend(check_file(f, root))
+    for e in errors:
+        print(f"FAIL  {e}")
+    print(f"checked {len(files)} files, {n_links} links: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
