@@ -10,7 +10,11 @@ Scheduler *counter* keys (``resident_v2.*`` polarity spills and staged
 bytes) are gated exactly: they are deterministic planner outputs, so any
 increase over the baseline fails the diff — the add4 scheduled plan must
 stay at 0 host polarity spills and chained runs must not regain host-write
-bytes.
+bytes.  The BankArray counters are gated the same way:
+``bankarray.parity_mismatch_bits`` (BankArray(banks=1) must stay
+bit-for-bit a plain BankSim) and ``bankarray.reduce_mismatch_lanes``
+(the cross-bank reduction tree must stay arithmetically exact) are both
+0 in the baseline, so any increase fails.
 
 Usage:
     python -m benchmarks.diff_bench NEW.json [BASELINE.json] [--tol 2.0]
@@ -39,8 +43,12 @@ def _success_keys(snap: dict) -> dict[str, float]:
             ("scheduled_detail", "scheduled",
              ("scheduled_success",)),
             ("resident_v2_detail", "resident_v2",
-             ("scheduled_success",))):
+             ("scheduled_success",)),
+            ("bankarray_detail", "bankarray",
+             ("success_b1", "success_b16"))):
         for name, d in snap.get(section, {}).items():
+            if not isinstance(d, dict):   # section-level scalar counters
+                continue
             for kind in kinds:
                 if kind in d:
                     out[f"{prefix}.{name}.{kind}"] = float(d[kind])
@@ -54,6 +62,10 @@ def _counter_keys(snap: dict) -> dict[str, float]:
         for kind in ("scheduled_spills", "chained_staged_bytes"):
             if kind in d:
                 out[f"resident_v2.{name}.{kind}"] = float(d[kind])
+    ba = snap.get("bankarray_detail", {})
+    for kind in ("parity_mismatch_bits", "reduce_mismatch_lanes"):
+        if kind in ba:
+            out[f"bankarray.{kind}"] = float(ba[kind])
     return out
 
 

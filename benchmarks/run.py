@@ -14,6 +14,10 @@ Prints CSV sections:
   * resident v2 (duplication-not-spill + pinned inputs): zero add4
     polarity spills at the native row geometry and strictly fewer
     chained host-write bytes than the PR-4 sessions,
+  * multi-bank scaling (BankArray): Monte-Carlo trial groups sharded
+    round-robin over N independent per-bank chips — modeled DRAM-time
+    (makespan) throughput at 16 banks vs 1, single-bank bit parity with
+    the plain BankSim path, and a cross-bank popcount reduction tree,
   * in-DRAM vs CPU cost model (the paper's motivation, Table-style),
   * kernel micro-benchmarks (packed-op throughput on this host),
   * PuD-engine offload accounting on LM workloads.
@@ -21,7 +25,7 @@ Prints CSV sections:
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]
 
 ``--json`` additionally writes machine-readable timings + success-rate
-deltas (default path BENCH_pr5.json) so CI can archive the trajectory;
+deltas (default path BENCH_pr6.json) so CI can archive the trajectory;
 ``benchmarks.diff_bench`` compares snapshots across PRs/nightlies.
 """
 from __future__ import annotations
@@ -305,8 +309,9 @@ def resident_vs_staged(fast=False):
         s_stg = float(charz.mc_program_success(name, trials=tr, seed=0))
         t_stg = time.perf_counter() - t0
         t0 = time.perf_counter()
-        s_res = float(charz.mc_program_success(name, trials=tr, seed=0,
-                                               resident=True))
+        s_res = float(charz.mc_program_success(
+            name, trials=tr, seed=0,
+            resident=CC.ResidentPolicy.SCHEDULED))
         t_res = time.perf_counter() - t0
         # command-stream traffic of one trial-batched run per mode
         traffic = {}
@@ -317,7 +322,9 @@ def resident_vs_staged(fast=False):
             rng = np.random.default_rng(1)
             ins = {n: rng.integers(0, 2, (12, isa.width)).astype(np.uint8)
                    for n in names}
-            CC.run_sim(prog, ins, isa, resident=resident)
+            CC.run_sim(prog, ins, isa,
+                       resident=(CC.ResidentPolicy.SCHEDULED if resident
+                                 else CC.ResidentPolicy.HOST))
             row_bytes = sim.geom.row_bits // 8
             traffic[resident] = {
                 "wr_bytes": sim.log.counts.get("WR", 0) * row_bytes,
@@ -381,8 +388,9 @@ def scheduled_vs_greedy(fast=False):
             plans[policy] = CC.schedule_resident(prog, isa, policy=policy)
         g, s = plans["greedy"], plans["scheduled"]
         t0 = time.perf_counter()
-        succ = float(charz.mc_program_success(name, trials=tr, seed=0,
-                                              resident="scheduled"))
+        succ = float(charz.mc_program_success(
+            name, trials=tr, seed=0,
+            resident=CC.ResidentPolicy.SCHEDULED))
         t_mc = time.perf_counter() - t0
         red = (1.0 - s.polarity_spills / g.polarity_spills
                if g.polarity_spills else 0.0)
@@ -490,8 +498,9 @@ def resident_v2(fast=False):
             staged_pr4 += (sim.log.counts.get("WR", 0) - wr0) \
                 * (sim.geom.row_bits // 8)
         # --- MC success at the PR-4 benchmark config ---
-        succ = float(charz.mc_program_success(name, trials=tr, seed=0,
-                                              resident="scheduled"))
+        succ = float(charz.mc_program_success(
+            name, trials=tr, seed=0,
+            resident=CC.ResidentPolicy.SCHEDULED))
         rows.append((name, g.polarity_spills, s.polarity_spills,
                      s.duplications, round(s.cost().energy_pj / 1e3, 1),
                      round(spill_alt.cost().energy_pj / 1e3, 1),
@@ -523,6 +532,132 @@ def resident_v2(fast=False):
     RESULTS["resident_v2_detail"] = detail
     RESULTS["resident_v2_add4_spills"] = add4["scheduled_spills"]
     return add4["scheduled_spills"]
+
+
+def multi_bank_scaling(fast=False):
+    """Multi-bank sharded Monte-Carlo + cross-bank reduction (BankArray).
+
+    Banks are independent chips operating concurrently in real DRAM, so
+    the scaling quantity is *modeled DRAM time*: the array finishes with
+    its slowest bank (makespan = max over per-bank command-log time).
+    On this 1-CPU host the banks still simulate sequentially, so
+    wall-clock does not scale — the honest wall columns show that.
+
+    Three measurements:
+
+    * **MC throughput scaling** — ``charz.mc_program_success(banks=N)``
+      shards the trial groups round-robin over N per-bank chips;
+      acceptance target: >= 10x trials/makespan at 16 banks vs 1
+      (>= 60% parallel efficiency), plus the scheduled-resident variant
+      (bank 0 runs the planner search, siblings replay its decisions),
+    * **single-bank parity** — ``BankArray(banks=1)`` executes the
+      program zoo bit-for-bit identically to a plain ``BankSim`` (exact
+      diff gate: ``parity_mismatch_bits`` must stay 0),
+    * **cross-bank reduction** — per-bank popcounts combined through the
+      host-mediated binary adder tree (``BankArray.popcount``), checked
+      against ideal arithmetic (``reduce_mismatch_lanes`` must stay 0).
+    """
+    from repro.core import charz
+    from repro.core import compiler as CC
+    from repro.core.bankarray import BankArray
+    from repro.core.isa import PudIsa
+    from repro.core.policy import ResidentPolicy
+    from repro.core.simulator import BankSim
+
+    groups = 48                      # divisible by 16 and by 1
+    trials = 96 if fast else 192
+    rows = []
+    detail = {}
+    for name in ("xor", "maj3"):
+        per = {}
+        for banks in (1, 16):
+            st: dict = {}
+            t0 = time.perf_counter()
+            succ = float(charz.mc_program_success(
+                name, trials=trials, seed=0, groups=groups, banks=banks,
+                stats=st))
+            per[banks] = {"success": succ,
+                          "makespan_ns": st["makespan_ns"],
+                          "total_time_ns": st["total_time_ns"],
+                          "wall_s": time.perf_counter() - t0}
+        speedup = per[1]["makespan_ns"] / per[16]["makespan_ns"]
+        eff = speedup / 16
+        rows.append((name, trials, groups,
+                     round(100 * per[1]["success"], 2),
+                     round(100 * per[16]["success"], 2),
+                     round(per[1]["makespan_ns"] / 1e3, 1),
+                     round(per[16]["makespan_ns"] / 1e3, 1),
+                     round(speedup, 2), round(100 * eff, 1),
+                     round(per[1]["wall_s"], 3),
+                     round(per[16]["wall_s"], 3)))
+        detail[name] = {
+            "trials": trials, "groups": groups,
+            "success_b1": per[1]["success"],
+            "success_b16": per[16]["success"],
+            "makespan_b1_ns": per[1]["makespan_ns"],
+            "makespan_b16_ns": per[16]["makespan_ns"],
+            "speedup_16": speedup, "efficiency_16": eff,
+        }
+    _csv("Multi-bank MC scaling (modeled DRAM time; banks concurrent)",
+         rows,
+         "program,trials,groups,succ_b1,succ_b16,makespan_b1_us,"
+         "makespan_b16_us,speedup,efficiency_pct,wall_b1_s,wall_b16_s")
+    sp = min(d["speedup_16"] for d in detail.values())
+    ef = min(d["efficiency_16"] for d in detail.values())
+    _p(f"16-bank modeled speedup: {sp:.2f}x (target >= 10x), "
+       f"efficiency {100 * ef:.1f}% (target >= 60%)")
+
+    # scheduled resident at 16 banks: search on bank 0, replay elsewhere
+    st = {}
+    t0 = time.perf_counter()
+    succ = float(charz.mc_program_success(
+        "xor", trials=trials, seed=0, groups=groups, banks=16,
+        resident=ResidentPolicy.SCHEDULED, stats=st))
+    detail["xor_scheduled_b16"] = {
+        "success_b16": succ, "makespan_ns": st["makespan_ns"],
+        "wall_s": time.perf_counter() - t0}
+    _p(f"xor scheduled@16 banks: success {100 * succ:.2f}%, "
+       f"makespan {st['makespan_ns'] / 1e3:.1f}us")
+
+    # single-bank parity: BankArray(banks=1) vs plain BankSim, program zoo
+    mism = 0
+    rng = np.random.default_rng(11)
+    for name in ("xor", "maj3", "add4"):
+        prog = charz.get_program(name)
+        in_names = sorted({i.name for i in prog.instrs if i.op == "input"})
+        arr = BankArray(row_bits=1024, seed=5, error_model="analog",
+                        trials=8, track_unshared=False)
+        sim = BankSim(row_bits=1024, seed=5, error_model="analog",
+                      trials=8, track_unshared=False)
+        w = arr.isa(0).width
+        ins = {n: rng.integers(0, 2, (8, w)).astype(np.uint8)
+               for n in in_names}
+        out_a = CC.run_sim(prog, ins, arr.isa(0))
+        out_b = CC.run_sim(prog, ins, PudIsa(sim))
+        mism += int(sum((out_a[k] != out_b[k]).sum()
+                        for k in prog.outputs))
+    detail["parity_mismatch_bits"] = mism
+    _p(f"BankArray(banks=1) vs BankSim parity mismatches: {mism} "
+       f"(target 0)")
+
+    # cross-bank reduction: per-bank popcounts -> host-mediated add tree
+    arr = BankArray(banks=4, row_bits=256, error_model="ideal", seed=0)
+    w = arr.isa(0).width
+    planes = [rng.integers(0, 2, (3, w)).astype(np.uint8)
+              for _ in range(4)]
+    counts, _bank = arr.popcount(planes)
+    want = sum(p.sum(axis=0, dtype=int) for p in planes)
+    got = sum(counts[i].astype(int) << i for i in range(counts.shape[0]))
+    bad = int((got != want).sum())
+    detail["reduce_mismatch_lanes"] = bad
+    detail["reduce_makespan_ns"] = arr.makespan_ns()
+    detail["reduce_total_time_ns"] = arr.total_time_ns()
+    _p(f"cross-bank popcount reduction: {bad} wrong lanes (target 0); "
+       f"makespan {arr.makespan_ns() / 1e3:.1f}us vs single-bank "
+       f"{arr.total_time_ns() / 1e3:.1f}us")
+    RESULTS["bankarray_detail"] = detail
+    RESULTS["bankarray_speedup_16"] = sp
+    return sp
 
 
 def calibration_scorecard():
@@ -624,7 +759,7 @@ def _json_path(argv) -> str | None:
     i = argv.index("--json")
     if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
         return argv[i + 1]
-    return "BENCH_pr5.json"
+    return "BENCH_pr6.json"
 
 
 def main() -> None:
@@ -647,6 +782,7 @@ def main() -> None:
     resident_vs_staged(fast=fast)
     scheduled_vs_greedy(fast=fast)
     resident_v2(fast=fast)
+    multi_bank_scaling(fast=fast)
     calibration_scorecard()
     cost_model_table()
     reliability_planning()

@@ -36,9 +36,9 @@ for name in ("xor", "maj3", "add4"):
     n_ops = sum(1 for i in prog.instrs if i.op not in ("input", "const"))
     p = charz.mc_program_success(name, trials=108, row_bits=1024)
     pr = charz.mc_program_success(name, trials=108, row_bits=1024,
-                                  resident=True)
+                                  resident=CC.ResidentPolicy.SCHEDULED)
     ps = charz.mc_program_success(name, trials=108, row_bits=1024,
-                                  resident="scheduled")
+                                  resident=CC.ResidentPolicy.SCHEDULED)
     est = charz.program_success_estimate(name)
     # the compile-time scheduler's spill win at the module's NATIVE row
     # geometry — the configuration the engine actually runs.  Static

@@ -76,7 +76,8 @@ print(f"  measured XOR-from-4-NANDs program: "
 # same statistic, a fraction of the bus traffic (see sim.log / IsaStats)
 noisy.sim.recycle_rows()
 wr0 = noisy.sim.log.counts.get("WR", 0)
-out_r = CC.run_sim(xor_prog, {"a": pa, "b": pb}, noisy, resident=True)
+out_r = CC.run_sim(xor_prog, {"a": pa, "b": pb}, noisy,
+                   resident=CC.ResidentPolicy.SCHEDULED)
 print(f"  resident (RowClone-chained) XOR:   "
       f"{100 * np.mean(out_r['out'] == (pa ^ pb)):.2f}%  "
       f"(host WRs this run: {noisy.sim.log.counts['WR'] - wr0}, "

@@ -1,0 +1,314 @@
+"""BankArray: N independent per-bank chips behind one device-addressed API.
+
+The paper characterizes 256 real DDR4 chips; PULSAR (PAPERS.md, arXiv
+2312.02880) shows chip-to-chip variation is real.  A :class:`BankArray`
+therefore shards work across ``banks`` **independent** ``BankSim``
+instances — each bank gets its *own chip identity* (decoder map + static
+sense-amp offsets) and its *own noise streams*, derived from the array
+seed via ``np.random.SeedSequence`` so streams never collide:
+
+* bank 0 uses ``seed`` directly — a ``BankArray(banks=1)`` is therefore
+  **bit-for-bit** a plain ``BankSim(seed=seed)`` (parity-tested across
+  the program zoo in ``tests/test_bankarray.py``),
+* banks 1..N-1 use integer seeds drawn from the spawn children of
+  ``SeedSequence([seed, 0xBA2C5])`` — distinct decoder hashes, distinct
+  per-cell offsets, distinct default noise streams.
+
+Banks in real DRAM operate **concurrently**: the array's modeled
+execution time is the *makespan* — ``max`` over banks of the per-bank
+command-log time — not the sum (:meth:`makespan_ns`).  On this
+simulator the banks still execute sequentially on the host, so
+wall-clock does not scale; modeled DRAM-time throughput does, and that
+is the quantity the "Multi-bank scaling" benchmark gates.  (ROADMAP
+item 2 — a DDR timing model with tFAW/tRRD inter-bank constraints —
+will make the makespan sub-linear in banks; today banks are fully
+independent.)
+
+Work distribution follows the round-robin device-axis idiom of
+``repro.launch.sharding.batch_axis_spec`` (a leading "bank" axis, items
+dealt modulo the axis size — :meth:`shard`): Monte-Carlo pair groups
+(``charz.mc_* (banks=N)``), chunk blocks (``PudEngine("dram",
+banks=N)``) and reduction operands all address banks this way.
+
+Resident plans cannot move between banks verbatim — row assignments and
+activation patterns depend on each bank's seed — but the *schedule
+decisions* (instruction order, De Morgan forms, duplication hints) are
+geometry-determined, so the ~0.5 s scheduler search runs **once** on
+bank 0 (memoized in ``compiler._SCHED_CACHE``) and every other bank
+replays the frozen decisions through ``schedule_resident(_fixed=...)``
+(two cheap planner passes per bank): see :meth:`sessions` /
+:meth:`schedule_decisions`.
+
+The first compiler-visible **cross-bank primitive** is the reduction
+tree (:meth:`tree_reduce_add`, :meth:`popcount`): per-bank partial sums
+are combined pairwise in ``ceil(log2 N)`` rounds of in-bank ripple-carry
+adds.  DDR4 has no bank-to-bank datapath, so each merge round-trips the
+source bank's output planes through the host and re-stages them on the
+destination bank — the staging traffic is charged to the destination
+bank's command log like any other host write, keeping the makespan
+honest.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+from . import compiler as CC
+from .device import get_module
+from .isa import PudIsa
+from .policy import ResidentPolicy, coerce_resident
+from .simulator import BankSim
+
+
+@lru_cache(maxsize=16)
+def _adder_program(k: int) -> CC.Program:
+    return CC.compile_expr(CC.adder_exprs(k))
+
+
+@lru_cache(maxsize=16)
+def _popcount_program(n: int) -> CC.Program:
+    return CC.compile_expr(CC.popcount_exprs(n))
+
+
+class BankArray:
+    """N independent per-bank ``BankSim``s addressed as one device.
+
+    Constructor arguments mirror ``BankSim`` (module, row_bits, seed,
+    temp_c, error_model, trials, ...); ``banks`` adds the device axis.
+    Sims are built lazily per ``(bank, trials)`` — :meth:`isa` — so one
+    array serves both scalar and trial-batched episodes per bank (the
+    chunk-blocked engine uses several block sizes on one bank; all of a
+    bank's sims share its chip identity and count toward its time).
+
+    >>> import numpy as np
+    >>> from repro.core.bankarray import BankArray
+    >>> arr = BankArray(banks=4, row_bits=128, error_model="ideal", seed=7)
+    >>> len(arr), len(set(arr.bank_seeds))     # distinct chip identities
+    (4, 4)
+    >>> arr.bank_seeds[0]                      # bank 0 IS the plain seed
+    7
+    >>> x = np.ones(arr.isa(0).width, np.uint8)
+    >>> [int(arr.isa(b).nary_op("and", [x, x]).sum()) for b in range(2)]
+    [64, 64]
+    """
+
+    def __init__(self, module=None, *, banks: int = 1, seed: int = 0,
+                 row_bits: int | None = None, temp_c: float = 50.0,
+                 error_model: str = "analog", trials: int | None = None,
+                 track_unshared: bool = True, **sim_kwargs):
+        if banks < 1:
+            raise ValueError(f"banks must be >= 1, got {banks}")
+        self.module = (get_module(module) if isinstance(module, str)
+                       else module or get_module())
+        self.banks = banks
+        self.seed = seed
+        self.trials = trials
+        self._sim_kwargs = dict(row_bits=row_bits, temp_c=temp_c,
+                                error_model=error_model,
+                                track_unshared=track_unshared, **sim_kwargs)
+        # Per-bank chip identities: bank 0 = the array seed (bit-for-bit
+        # the single-bank device); banks 1.. spawn from a *keyed* child
+        # sequence so identity seeds never collide with bank 0's noise
+        # spawn stream (which starts from SeedSequence(seed) child 0).
+        ident = np.random.SeedSequence([seed, 0xBA2C5])
+        self.bank_seeds: list[int] = [seed] + [
+            int(c.generate_state(1, np.uint64)[0])
+            for c in ident.spawn(banks - 1)]
+        #: per-bank noise-stream derivation (chip identity stays fixed)
+        self._noise_seqs = [np.random.SeedSequence(s)
+                            for s in self.bank_seeds]
+        self._isas: dict[tuple[int, int | None], PudIsa] = {}
+
+    # ------------- device addressing -------------
+    def __len__(self) -> int:
+        return self.banks
+
+    def isa(self, bank: int = 0, trials: int | None = ...,
+            **overrides) -> PudIsa:
+        """The ISA of one bank at one trial-batch size (lazily built,
+        cached per ``(bank, trials, overrides)``).  ``trials`` defaults
+        to the array's construction-time trial count; ``overrides``
+        replace individual ``BankSim`` kwargs for this sim only (the
+        engine keeps ``track_unshared`` on for scalar sims but off for
+        trial-batched ones, matching the single-bank engine)."""
+        if not 0 <= bank < self.banks:
+            raise IndexError(f"bank {bank} out of range 0..{self.banks - 1}")
+        t = self.trials if trials is ... else trials
+        key = (bank, t, tuple(sorted(overrides.items())))
+        if key not in self._isas:
+            sim = BankSim(self.module, seed=self.bank_seeds[bank],
+                          trials=t, **{**self._sim_kwargs, **overrides})
+            self._isas[key] = PudIsa(sim, bank=bank)
+        return self._isas[key]
+
+    def __getitem__(self, bank: int) -> PudIsa:
+        return self.isa(bank)
+
+    @property
+    def isas(self) -> list[PudIsa]:
+        """Default-trials ISA of every bank (builds any missing sims)."""
+        return [self.isa(b) for b in range(self.banks)]
+
+    def shard(self, n_items: int) -> list[list[int]]:
+        """Round-robin item indices per bank (the host-side analogue of
+        the launch layer's leading data axis: item i -> bank i % N)."""
+        return [list(range(b, n_items, self.banks))
+                for b in range(self.banks)]
+
+    def next_noise_seed(self, bank: int = 0) -> int:
+        """A fresh deterministic noise-stream seed for one bank's next
+        episode (bank 0's stream is spawn-identical to the single-bank
+        engine's, so ``banks=1`` reproduces it bit-for-bit)."""
+        child = self._noise_seqs[bank].spawn(1)[0]
+        return int(child.generate_state(1, np.uint64)[0])
+
+    def reseed_noise(self, bank: int | None = None) -> None:
+        """Restart every constructed sim of one bank (or all banks) on a
+        fresh independent noise stream."""
+        for (b, *_), isa in self._isas.items():
+            if bank is None or b == bank:
+                isa.sim.reseed_noise(self.next_noise_seed(b))
+
+    # ------------- modeled concurrent-bank time -------------
+    def bank_time_ns(self) -> list[float]:
+        """Per-bank simulated command time (sum over that bank's sims)."""
+        out = [0.0] * self.banks
+        for (b, *_), isa in self._isas.items():
+            out[b] += isa.sim.log.time_ns
+        return out
+
+    def makespan_ns(self) -> float:
+        """Modeled array execution time: banks run concurrently in real
+        hardware, so the array finishes with its slowest bank."""
+        return max(self.bank_time_ns())
+
+    def total_time_ns(self) -> float:
+        """Sum of per-bank times — what one bank would have taken."""
+        return float(sum(self.bank_time_ns()))
+
+    # ------------- shared scheduling across banks -------------
+    def schedule_decisions(self, prog: CC.Program, *,
+                           trials: int | None = ...,
+                           pin_inputs: bool = False,
+                           duplicate: bool | None = None) -> tuple:
+        """Run the scheduler search once on bank 0 (memoized in
+        ``compiler._SCHED_CACHE``) and return the frozen
+        ``(order, forms, dup_hints, dup_enabled)`` decisions for replay
+        on sibling banks via ``schedule_resident(_fixed=...)``."""
+        return CC.shared_schedule_decisions(
+            prog, self.isa(0, trials), pin_inputs=pin_inputs,
+            duplicate=duplicate)
+
+    def sessions(self, prog: CC.Program, *, trials: int | None = ...,
+                 policy: ResidentPolicy = ResidentPolicy.SCHEDULED,
+                 pin_inputs: bool | None = None,
+                 duplicate: bool | None = None
+                 ) -> list[CC.ResidentSession]:
+        """One ResidentSession per bank over this program.  Under the
+        scheduled policy the (order, form, duplication) search runs once
+        on bank 0 and every bank replays the frozen decisions; each bank
+        still plans its own rows/pairs (plans are seed-dependent)."""
+        policy = coerce_resident(policy, where="BankArray.sessions")
+        fixed = None
+        if policy is ResidentPolicy.SCHEDULED:
+            pins = (True if pin_inputs is None else pin_inputs)
+            fixed = self.schedule_decisions(prog, trials=trials,
+                                            pin_inputs=pins,
+                                            duplicate=duplicate)
+        return [CC.ResidentSession(prog, self.isa(b, trials),
+                                   policy=policy.value, pin_inputs=pin_inputs,
+                                   duplicate=duplicate, fixed=fixed)
+                for b in range(self.banks)]
+
+    # ------------- cross-bank reduction tree -------------
+    def _run_add(self, bank: int, a: np.ndarray, b: np.ndarray,
+                 policy: ResidentPolicy) -> np.ndarray:
+        """(k, ...) + (k, ...) -> (k+1, ...) on one bank's adder."""
+        k = a.shape[0]
+        prog = _adder_program(k)
+        ins = {f"a{i}": a[i] for i in range(k)} \
+            | {f"b{i}": b[i] for i in range(k)}
+        isa = self.isa(bank)
+        plan = None
+        if policy is ResidentPolicy.SCHEDULED:
+            # search once per adder width on bank 0, replay elsewhere
+            fixed = self.schedule_decisions(prog, trials=self.trials)
+            plan = CC.schedule_resident(prog, isa, policy="scheduled",
+                                        _fixed=None if bank == 0 else fixed)
+        out = CC.run_sim(prog, ins, isa, resident=policy, plan=plan)
+        return np.stack([out[f"s{i}"] for i in range(k)] + [out["cout"]])
+
+    def tree_reduce_add(self, planes_per_bank: list[np.ndarray], *,
+                        policy: ResidentPolicy | None = None
+                        ) -> tuple[np.ndarray, int]:
+        """Sum per-bank bit-plane numbers with a binary reduction tree.
+
+        ``planes_per_bank[b]`` is bank b's operand: a ``(k_b, w)`` (or
+        trial-batched ``(k_b, T, w)``) uint8 LSB-first plane stack.
+        Round r merges bank pairs at stride ``2**r`` — the destination
+        (lower-indexed) bank runs a ripple-carry add of its own planes
+        and the source bank's, whose output planes arrive through the
+        host (read back from the source, re-staged on the destination:
+        DDR4 has no direct bank-to-bank path).  Different rounds run on
+        *different* destination banks concurrently in hardware, so the
+        modeled cost grows with tree depth, not bank count.
+
+        Returns ``(sum_planes, bank)`` — the final ``(k+ceil(log2 N), ...)``
+        plane stack and the bank index holding it (bank of the first
+        non-empty operand).  Empty operands (``k_b == 0``) are skipped.
+        """
+        policy = coerce_resident(policy, where="BankArray.tree_reduce_add",
+                                 default=ResidentPolicy.SCHEDULED)
+        if len(planes_per_bank) != self.banks:
+            raise ValueError(f"want one operand per bank "
+                             f"({self.banks}), got {len(planes_per_bank)}")
+        live = [(b, np.asarray(p, dtype=np.uint8))
+                for b, p in enumerate(planes_per_bank)
+                if np.asarray(p).shape[0]]
+        if not live:
+            raise ValueError("tree_reduce_add of all-empty operands")
+        while len(live) > 1:
+            nxt = []
+            for i in range(0, len(live) - 1, 2):
+                (db, a), (_sb, b) = live[i], live[i + 1]
+                k = max(a.shape[0], b.shape[0])
+                pad = [np.zeros_like(x[:1]) for x in (a, b)]
+                a = np.concatenate([a] + pad[0:1] * (k - a.shape[0]))
+                b = np.concatenate([b] + pad[1:2] * (k - b.shape[0]))
+                nxt.append((db, self._run_add(db, a, b, policy)))
+            if len(live) % 2:
+                nxt.append(live[-1])
+            live = nxt
+        return live[0][1], live[0][0]
+
+    def popcount(self, bit_planes_per_bank: list[np.ndarray], *,
+                 policy: ResidentPolicy | None = None
+                 ) -> tuple[np.ndarray, int]:
+        """Cross-bank popcount accumulation: each bank counts its own
+        single-bit planes with an in-bank adder tree
+        (``compiler.popcount_exprs``), then the per-bank partial counts
+        combine through :meth:`tree_reduce_add`.  Returns the count
+        planes (LSB first) and the bank holding them."""
+        policy = coerce_resident(policy, where="BankArray.popcount",
+                                 default=ResidentPolicy.SCHEDULED)
+        partial: list[np.ndarray] = []
+        for b, planes in enumerate(bit_planes_per_bank):
+            planes = np.asarray(planes, dtype=np.uint8)
+            n = planes.shape[0]
+            if n == 0:
+                partial.append(planes)
+                continue
+            prog = _popcount_program(n)
+            ins = {f"x{i}": planes[i] for i in range(n)}
+            plan = None
+            if policy is ResidentPolicy.SCHEDULED:
+                fixed = self.schedule_decisions(prog, trials=self.trials)
+                plan = CC.schedule_resident(
+                    prog, self.isa(b), policy="scheduled",
+                    _fixed=None if b == 0 else fixed)
+            out = CC.run_sim(prog, ins, self.isa(b), resident=policy,
+                             plan=plan)
+            partial.append(np.stack([out[f"c{i}"]
+                                     for i in range(len(out))]))
+        return self.tree_reduce_add(partial, policy=policy)

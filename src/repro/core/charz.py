@@ -39,8 +39,10 @@ from . import analog as A
 from . import compiler as CC
 from . import decoder as DEC
 from .analog import CLOSE, FAR, MIDDLE
+from .bankarray import BankArray
 from .device import MODULE_ZOO, get_module
 from .isa import PudIsa
+from .policy import ResidentPolicy, coerce_resident
 from .simulator import BankSim
 
 REGION_NAMES = {CLOSE: "close", MIDDLE: "middle", FAR: "far"}
@@ -99,6 +101,40 @@ def _stratified_pairs(isa: PudIsa, n_rf: int, n_rl: int,
     return out
 
 
+def _bank_pair_schedule(arr: BankArray, groups: int, pairs_of):
+    """Deal MC pair groups round-robin across the array's banks.
+
+    Global group slot g runs on bank ``g % banks``, consuming that bank's
+    own stratified pair list (``pairs_of(isa)``) in order — each bank
+    sweeps the 3x3 region grid of *its own chip* while the total group
+    count stays ``groups``-bounded.  With ``banks=1`` this yields exactly
+    the single-bank pair sequence (bit-for-bit the legacy estimate); with
+    N banks the modeled makespan drops ~1/N because the groups execute on
+    independent banks concurrently.  Yields ``(isa, pair)`` in run order.
+    """
+    its = {}
+    for g in range(groups):
+        b = g % arr.banks
+        if b not in its:
+            its[b] = iter(pairs_of(arr.isa(b)))
+        pair = next(its[b], None)
+        if pair is not None:        # a bank may drop decoder-miss groups
+            yield arr.isa(b), pair
+
+
+def _fill_stats(stats: dict | None, arr: BankArray, groups: int,
+                tg: int) -> None:
+    """Record modeled concurrent-bank timing into a caller-passed dict."""
+    if stats is None:
+        return
+    stats.update({
+        "banks": arr.banks, "groups": groups, "trials_per_group": tg,
+        "bank_time_ns": arr.bank_time_ns(),
+        "makespan_ns": arr.makespan_ns(),
+        "total_time_ns": arr.total_time_ns(),
+    })
+
+
 def _random_bits(rng: np.random.Generator, shape: tuple) -> np.ndarray:
     """Uniform random 0/1 uint8 array from bulk entropy (~20x faster than
     ``rng.integers(0, 2, ...)`` at Monte-Carlo sizes)."""
@@ -120,16 +156,28 @@ def _want_nary(op: str, ops: np.ndarray | list, axis: int = 0) -> np.ndarray:
 def mc_boolean_success(op: str, n: int, *, trials: int = 200,
                        row_bits: int = 2048, seed: int = 0,
                        module: str | None = None, temp_c: float = 50.0,
-                       batched: bool = True,
-                       groups: int = MC_PAIR_GROUPS) -> float:
+                       batched: bool = True, banks: int = 1,
+                       groups: int = MC_PAIR_GROUPS,
+                       stats: dict | None = None) -> float:
     """Cell-averaged MC success of an n-input op on the noisy simulator.
 
     ``batched=True`` (default) runs ``ceil(trials/groups)`` trials per
     stratified activation pair in one vectorized episode each; the legacy
     ``batched=False`` path runs one episode per trial with a scrambled pair
     walk (same target statistic, ~10-30x slower).
+
+    ``banks`` shards the stratified pair groups round-robin across a
+    :class:`~repro.core.bankarray.BankArray` of independent per-bank
+    chips (group g runs on bank ``g % banks`` with that bank's own
+    stratified pair walk) — the estimate then averages over *chips* as
+    well as regions, like the paper's multi-chip protocol.  ``banks=1``
+    is bit-for-bit the single-``BankSim`` path.  ``stats``, if a dict,
+    receives the modeled concurrent-bank timing (per-bank time,
+    makespan).
     """
     if not batched:
+        if banks != 1:
+            raise ValueError("banks > 1 requires batched=True")
         sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
                       temp_c=temp_c, error_model="analog")
         isa = PudIsa(sim)
@@ -144,28 +192,33 @@ def mc_boolean_success(op: str, n: int, *, trials: int = 200,
             tot += isa.width
         return ok / tot
     tg = max(1, -(-trials // groups))
-    sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
-                  temp_c=temp_c, error_model="analog", trials=tg,
-                  track_unshared=False)
-    isa = PudIsa(sim)
+    arr = BankArray(module or get_module(), banks=banks, row_bits=row_bits,
+                    seed=seed, temp_c=temp_c, error_model="analog",
+                    trials=tg, track_unshared=False)
     rng = np.random.default_rng(seed + 1)
     ok = 0
     tot = 0
-    for pair in _stratified_pairs(isa, n, n, groups, seed=seed):
-        sim.recycle_rows()          # bound the hot working set to one op
+    for isa, pair in _bank_pair_schedule(
+            arr, groups, lambda isa: _stratified_pairs(isa, n, n, groups,
+                                                       seed=seed)):
+        isa.sim.recycle_rows()      # bound the hot working set to one op
         # trial-major draw: operand staging reads it contiguously
         ops = _random_bits(rng, (tg, n, isa.width))
         got = isa.nary_op(op, ops.swapaxes(0, 1), pair=pair)
         ok += int(np.sum(got == _want_nary(op, ops, axis=1)))
         tot += got.size
+    _fill_stats(stats, arr, groups, tg)
     return ok / tot
 
 
 def mc_not_success(n_dst: int = 1, *, trials: int = 200, row_bits: int = 2048,
                    seed: int = 0, module: str | None = None,
-                   batched: bool = True,
-                   groups: int = MC_PAIR_GROUPS) -> float:
+                   batched: bool = True, banks: int = 1,
+                   groups: int = MC_PAIR_GROUPS,
+                   stats: dict | None = None) -> float:
     if not batched:
+        if banks != 1:
+            raise ValueError("banks > 1 requires batched=True")
         sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
                       error_model="analog")
         isa = PudIsa(sim)
@@ -179,19 +232,22 @@ def mc_not_success(n_dst: int = 1, *, trials: int = 200, row_bits: int = 2048,
             tot += isa.width
         return ok / tot
     tg = max(1, -(-trials // groups))
-    sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
-                  error_model="analog", trials=tg, track_unshared=False)
-    isa = PudIsa(sim)
-    n_rf = isa.not_activation(n_dst)
+    arr = BankArray(module or get_module(), banks=banks, row_bits=row_bits,
+                    seed=seed, error_model="analog", trials=tg,
+                    track_unshared=False)
     rng = np.random.default_rng(seed + 1)
     ok = 0
     tot = 0
-    for pair in _stratified_pairs(isa, n_rf, n_dst, groups, seed=seed):
-        sim.recycle_rows()          # bound the hot working set to one op
+    for isa, pair in _bank_pair_schedule(
+            arr, groups,
+            lambda isa: _stratified_pairs(isa, isa.not_activation(n_dst),
+                                          n_dst, groups, seed=seed)):
+        isa.sim.recycle_rows()      # bound the hot working set to one op
         bits = _random_bits(rng, (tg, isa.width))
         got = isa.op_not(bits, n_dst=n_dst, pair=pair)
         ok += int(np.sum(got == 1 - bits))
         tot += got.size
+    _fill_stats(stats, arr, groups, tg)
     return ok / tot
 
 
@@ -307,8 +363,10 @@ def program_success_estimate(name: str, module: str | None = None,
 def mc_program_success(program: str | CC.Program, *, trials: int = 200,
                        row_bits: int = 2048, seed: int = 0,
                        module: str | None = None, temp_c: float = 50.0,
-                       batched: bool = True, resident: bool | str = False,
-                       groups: int = MC_PAIR_GROUPS) -> float:
+                       batched: bool = True,
+                       resident: ResidentPolicy | bool | str | None = None,
+                       banks: int = 1, groups: int = MC_PAIR_GROUPS,
+                       stats: dict | None = None) -> float:
     """Bit-averaged MC success of a whole compiled program on the noisy
     simulator: every output bit of every trial is compared against
     ``compiler.run_ideal`` on the same random inputs.
@@ -322,48 +380,72 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
     execution per trial on a scalar sim (same statistic; the walk then
     advances every instruction of every trial).
 
-    ``resident`` routes execution through the resident-register executor
-    (RowClone-chained intermediates) instead of the host-staged path —
-    the same statistic over a different command stream (requires
-    ``batched=True``; rows are recycled between groups, not mid-program).
-    ``True`` / ``"scheduled"`` run the compile-time polarity/residency
-    scheduler (the engine-default policy): the (order, form, duplication)
-    search runs once — memoized per (program, isa geometry) by
-    ``compiler.schedule_resident`` — and later groups replan with the
-    frozen decisions while the activation-pair walk keeps sweeping;
-    ``"greedy"`` keeps the PR-3 reference stream.
+    ``resident`` (a :class:`~repro.core.policy.ResidentPolicy`; legacy
+    bool/str spellings coerce with a one-shot DeprecationWarning) routes
+    execution through the resident-register executor (RowClone-chained
+    intermediates) instead of the host-staged path — the same statistic
+    over a different command stream (requires ``batched=True``; rows are
+    recycled between groups, not mid-program).  ``SCHEDULED`` runs the
+    compile-time polarity/residency scheduler (the engine-default
+    policy): the (order, form, duplication) search runs once — memoized
+    per (program, isa geometry) by ``compiler.schedule_resident`` — and
+    later groups replan with the frozen decisions while the
+    activation-pair walk keeps sweeping; ``GREEDY`` keeps the PR-3
+    reference stream.
+
+    ``banks`` shards the trial groups round-robin across a
+    :class:`~repro.core.bankarray.BankArray` — group g executes on bank
+    ``g % banks`` (its own chip identity and noise streams); under the
+    scheduled policy the search runs once on bank 0 and sibling banks
+    replay the frozen decisions (``compiler.shared_schedule_decisions``).
+    ``banks=1`` is bit-for-bit the single-``BankSim`` estimate.
+    ``stats``, if a dict, receives the modeled concurrent-bank timing.
     """
     prog = get_program(program) if isinstance(program, str) else program
-    if resident is True:
-        resident = "scheduled"
+    pol = coerce_resident(resident, where="charz.mc_program_success")
     names = sorted({i.name for i in prog.instrs if i.op == "input"})
     rng = np.random.default_rng(seed + 1)
     ok = 0
     tot = 0
-    if resident and not batched:
-        raise ValueError("resident=True requires batched=True")
+    if pol.is_resident and not batched:
+        raise ValueError("resident execution requires batched=True")
+    if banks != 1 and not batched:
+        raise ValueError("banks > 1 requires batched=True")
     if batched:
         groups = max(1, min(groups, trials))
         tg = max(1, -(-trials // groups))
-        sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
-                      temp_c=temp_c, error_model="analog", trials=tg,
-                      track_unshared=False)
-        isa = PudIsa(sim)
-        for _g in range(groups):
+        arr = BankArray(module or get_module(), banks=banks,
+                        row_bits=row_bits, seed=seed, temp_c=temp_c,
+                        error_model="analog", trials=tg,
+                        track_unshared=False)
+        decisions = None
+        for g in range(groups):
+            isa = arr.isa(g % banks)
             plan = None
-            if resident:
-                sim.recycle_rows()   # resident runs re-stage all state
-                if resident == "scheduled":
-                    # the search result is cached: group 1 pays it, later
-                    # groups (and later calls) replan with frozen decisions
-                    plan = CC.schedule_resident(prog, isa,
-                                                policy="scheduled")
+            if pol.is_resident:
+                isa.sim.recycle_rows()  # resident runs re-stage all state
+                if pol is ResidentPolicy.SCHEDULED:
+                    if isa.bank == 0:
+                        # the search result is cached: group 1 pays it,
+                        # later groups replan with frozen decisions
+                        plan = CC.schedule_resident(prog, isa,
+                                                    policy="scheduled")
+                    else:
+                        # sibling banks replay bank 0's decisions (plans
+                        # are seed-dependent; decisions are not)
+                        if decisions is None:
+                            decisions = CC.shared_schedule_decisions(
+                                prog, arr.isa(0))
+                        plan = CC.schedule_resident(prog, isa,
+                                                    policy="scheduled",
+                                                    _fixed=decisions)
             ins = {n: _random_bits(rng, (tg, isa.width)) for n in names}
-            got = CC.run_sim(prog, ins, isa, trials=tg, resident=resident,
+            got = CC.run_sim(prog, ins, isa, trials=tg, resident=pol,
                              plan=plan)
             want = CC.run_ideal(prog, ins, width=isa.width)
             ok += sum(int(np.sum(got[k] == want[k])) for k in prog.outputs)
             tot += sum(got[k].size for k in prog.outputs)
+        _fill_stats(stats, arr, groups, tg)
         return ok / tot
     sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
                   temp_c=temp_c, error_model="analog")

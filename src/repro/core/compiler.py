@@ -22,7 +22,9 @@ executors share the IR:
     command-accurate); **trial-batched** on a ``BankSim(trials=T)`` ISA,
     where registers are ``(T, width)`` planes and every instruction is one
     vectorized Monte-Carlo episode (``batched=False`` keeps the per-trial
-    loop as the reference implementation).  ``resident=True`` switches
+    loop as the reference implementation).  ``resident=`` (a
+    :class:`~repro.core.policy.ResidentPolicy`; legacy bool/str spellings
+    coerce with a one-shot DeprecationWarning) switches
     from host-staged operand round-trips to *resident-register* execution:
     SSA registers live in physical rows of the subarray pair and chain
     between instructions via RowClone — the in-bank discipline the paper's
@@ -46,6 +48,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .isa import CostModel, OpCost, PudIsa
+from .policy import ResidentPolicy  # noqa: F401  (canonical resident spelling)
 
 MAX_FANIN = 16
 
@@ -1145,7 +1148,8 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
     4
     >>> out = CC.run_sim(prog, {"a": np.ones(32, np.uint8),
     ...                         "b": np.zeros(32, np.uint8)},
-    ...                  isa, resident="scheduled", plan=plan)
+    ...                  isa, resident=CC.ResidentPolicy.SCHEDULED,
+    ...                  plan=plan)
     >>> int(out["out"].sum())               # 1 ^ 0 = 1 on every lane
     32
     """
@@ -1289,6 +1293,26 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
     return finalize(best, hints, use_dup)
 
 
+def shared_schedule_decisions(prog: Program, isa: PudIsa, *,
+                              pin_inputs: bool = False,
+                              duplicate: bool | None = None) -> tuple:
+    """The frozen ``(order, forms, dup_hints, dup_enabled)`` scheduler
+    decisions of one ISA, for replay on *sibling banks* of a BankArray.
+
+    Resident plans are seed-dependent (row assignments, activation
+    patterns), so a plan cannot move between banks — but the schedule
+    decisions are geometry-determined.  This runs ``schedule_resident``
+    once on the given ISA (memoized in ``_SCHED_CACHE``, so repeated
+    calls are free) and returns the decision tuple that sibling banks
+    pass as ``schedule_resident(..., _fixed=...)`` or
+    ``ResidentSession(fixed=...)`` — two cheap planner passes per bank
+    instead of the ~0.5 s search per bank."""
+    plan = schedule_resident(prog, isa, policy="scheduled",
+                             pin_inputs=pin_inputs, duplicate=duplicate)
+    return (plan.order, dict(plan.demorgan), dict(plan.dup_hints),
+            plan.dup_enabled)
+
+
 class _ResidentExec:
     """Mechanically execute a ResidentPlan on the (noisy) simulator.
 
@@ -1420,7 +1444,7 @@ class ResidentSession:
 
     def __init__(self, prog: Program, isa: PudIsa, *,
                  policy: str = "greedy", pin_inputs: bool | None = None,
-                 duplicate: bool | None = None):
+                 duplicate: bool | None = None, fixed: tuple | None = None):
         self.prog, self.isa = prog, isa
         self.policy = "scheduled" if policy is True else policy
         self.pin_inputs = (self.policy == "scheduled"
@@ -1428,7 +1452,9 @@ class ResidentSession:
         #: spill-placement ablation knob (None = the policy default)
         self.duplicate = duplicate
         self._carry: dict | None = None
-        self._fixed: tuple | None = None
+        #: pre-adjudicated scheduler decisions — seeded by BankArray so
+        #: sibling banks replay bank 0's search (shared_schedule_decisions)
+        self._fixed: tuple | None = fixed
         #: pinned input words: name -> ((l-row, is_complement), word)
         self._pins: dict[str, tuple[tuple[int, bool], np.ndarray]] = {}
         self._name_reg = {i.name: i.dst for i in prog.instrs
@@ -1475,7 +1501,7 @@ def _run_sim_resident(prog: Program, inputs: dict[str, np.ndarray],
 def run_sim(prog: Program, inputs: dict[str, np.ndarray], isa: PudIsa, *,
             trials: int | None = None, batched: bool = True,
             recycle: bool | None = None,
-            resident: bool | str = False,
+            resident: "ResidentPolicy | bool | str | None" = None,
             plan: ResidentPlan | None = None) -> dict[str, np.ndarray]:
     """Execute on the (noisy) DRAM simulator through the ISA.
 
@@ -1505,36 +1531,40 @@ def run_sim(prog: Program, inputs: dict[str, np.ndarray], isa: PudIsa, *,
     *in the bank* across instructions, staged between ops by RowClone
     instead of host write-backs; only program inputs, reference-constant
     rows and the rare polarity spill cross the bus, and only program
-    *outputs* are read back.  ``True`` / ``"scheduled"`` (the engine
-    default) runs the polarity/residency scheduler
-    (:func:`schedule_resident`) first — consumer-polarity De Morgan form
-    selection, duplication instead of polarity spills, pressure-ordered
-    instructions, Belady row allocation — and executes its
-    :class:`ResidentPlan` mechanically; ``"greedy"`` plans with the PR-3
-    greedy policy (bit-for-bit the old dynamic executor's command
-    stream).  ``True`` means the same policy at every API layer
-    (``run_sim``, :class:`ResidentSession`, ``PudEngine``): scheduled.
+    *outputs* are read back.  Takes a
+    :class:`~repro.core.policy.ResidentPolicy` (the canonical spelling):
+    ``SCHEDULED`` (the engine default) runs the polarity/residency
+    scheduler (:func:`schedule_resident`) first — consumer-polarity
+    De Morgan form selection, duplication instead of polarity spills,
+    pressure-ordered instructions, Belady row allocation — and executes
+    its :class:`ResidentPlan` mechanically; ``GREEDY`` plans with the
+    PR-3 greedy policy (bit-for-bit the old dynamic executor's command
+    stream); ``HOST`` (= ``None``, the default) is the host-staged path
+    above.  Legacy plain ``True``/``False``/``"greedy"``/``"scheduled"``
+    spellings still coerce, with a one-shot DeprecationWarning.
     ``plan=`` skips planning and executes a prebuilt plan (its pinned
     pairs/rows must refer to this ISA's module/seed).  Requires the
     batched executor semantics (works on scalar and trial-batched sims
     alike) and manages physical rows itself, so ``recycle`` is ignored.
     """
+    from .policy import ResidentPolicy, coerce_resident
+    pol = coerce_resident(resident, where="compiler.run_sim")
     t_sim = isa.trials
     if recycle is None:
         recycle = t_sim is not None
-    if plan is not None and not resident:
+    if plan is not None and not pol.is_resident:
         raise ValueError("plan= is a resident-execution schedule; pass "
-                         "resident=True/'greedy'/'scheduled' with it")
-    if resident:
+                         "resident=ResidentPolicy.GREEDY/SCHEDULED with it")
+    if pol.is_resident:
         if not batched:
-            raise ValueError("resident=True requires the batched executor "
-                             "(the per-trial reference path is host-staged)")
+            raise ValueError("resident execution requires the batched "
+                             "executor (the per-trial reference path is "
+                             "host-staged)")
         if trials is not None and trials != (1 if t_sim is None else t_sim):
             raise ValueError(
                 f"trials={trials} but the ISA's sim runs "
                 f"{t_sim or 1} trials; build BankSim(trials={trials})")
-        policy = "scheduled" if resident is True else resident
-        return _run_sim_resident(prog, inputs, isa, policy=policy,
+        return _run_sim_resident(prog, inputs, isa, policy=pol.value,
                                  plan=plan)
     if batched:
         if trials is not None and trials != (1 if t_sim is None else t_sim):

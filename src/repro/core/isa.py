@@ -289,8 +289,14 @@ class PudIsa:
     destinations).  Logical words are ``shared_w`` bits.
     """
 
-    def __init__(self, sim: BankSim, *, f_sub: int = 0, l_sub: int | None = None):
+    def __init__(self, sim: BankSim, *, f_sub: int = 0,
+                 l_sub: int | None = None, bank: int = 0):
         self.sim = sim
+        #: device address on a multi-bank array (BankArray): which bank
+        #: this ISA's subarray pair lives in.  Purely an identity axis —
+        #: banks are independent chips — used by the engine's round-robin
+        #: dispatch and the per-bank OffloadReport attribution.
+        self.bank = bank
         self.f_sub = f_sub
         self.l_sub = f_sub + 1 if l_sub is None else l_sub
         if abs(self.f_sub - self.l_sub) != 1:

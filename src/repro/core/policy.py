@@ -1,0 +1,144 @@
+"""Engine-facing configuration types: ResidentPolicy + EngineConfig.
+
+Before PR 6 every API layer spelled the resident-execution mode as an
+ad-hoc ``bool | str | None`` tri-state (``False`` = host-staged,
+``"greedy"``/``"scheduled"`` = the two resident executors, ``True`` =
+"whatever the scheduled default is") and ``PudEngine.__init__`` grew one
+keyword per PR.  This module replaces both:
+
+* :class:`ResidentPolicy` — a ``str``-subclass enum (``HOST`` /
+  ``GREEDY`` / ``SCHEDULED``) accepted at every layer
+  (``PudEngine``, ``compiler.run_sim``, ``charz.mc_program_success``).
+  Because members *are* strings, they flow through the existing
+  ``policy in ("greedy", "scheduled")`` plumbing unchanged.
+* :class:`EngineConfig` — a frozen dataclass holding the whole engine
+  configuration (backend, module, noise, seed, resident policy, block
+  chaining, bank count); ``PudEngine(EngineConfig(...))`` replaces the
+  kwarg pile while the individual kwargs keep working.
+
+Legacy spellings (``resident=True/False/"greedy"/"scheduled"`` as plain
+bool/str) still work everywhere through :func:`coerce_resident`, which
+emits a :class:`DeprecationWarning` **once per call site** and maps them
+onto the enum.  New spellings never warn: the shim distinguishes them
+with ``isinstance(v, ResidentPolicy)`` — a plain ``"greedy"`` warns, the
+member ``ResidentPolicy.GREEDY`` (which compares equal to it) does not.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+from enum import Enum
+
+__all__ = ["ResidentPolicy", "EngineConfig", "coerce_resident",
+           "reset_deprecation_warnings"]
+
+
+class ResidentPolicy(str, Enum):
+    """How compiled programs execute on the DRAM backend.
+
+    ``HOST`` — host-staged reference path: every instruction's operands
+    cross the DDR bus (was ``resident=False``).
+    ``GREEDY`` — the bit-for-bit PR-3 resident reference executor.
+    ``SCHEDULED`` — the compile-time polarity/residency scheduler (the
+    engine default on the dram backend; was ``resident=True``).
+    """
+
+    HOST = "host"
+    GREEDY = "greedy"
+    SCHEDULED = "scheduled"
+
+    @property
+    def is_resident(self) -> bool:
+        return self is not ResidentPolicy.HOST
+
+    def to_legacy(self) -> bool | str:
+        """The internal tri-state the executors consume
+        (``False`` | ``"greedy"`` | ``"scheduled"``)."""
+        return False if self is ResidentPolicy.HOST else self.value
+
+
+#: call sites that already emitted their one deprecation warning
+_WARNED: set[str] = set()
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which call sites warned (tests of the warn-once shim)."""
+    _WARNED.clear()
+
+
+def coerce_resident(value, *, where: str,
+                    default: ResidentPolicy = ResidentPolicy.HOST
+                    ) -> ResidentPolicy:
+    """Map any accepted ``resident=`` spelling onto a ResidentPolicy.
+
+    ``None`` means "unset" and resolves to ``default`` silently (it is
+    the new signatures' default value, not a legacy spelling).  Enum
+    members pass through silently.  Legacy plain ``bool``/``str``
+    spellings are coerced (``True`` -> SCHEDULED, ``False`` -> HOST,
+    ``"greedy"``/``"scheduled"``/``"host"`` by value) with one
+    DeprecationWarning per ``where`` call-site key.
+    """
+    if value is None:
+        return default
+    if isinstance(value, ResidentPolicy):
+        return value
+    if isinstance(value, bool):
+        pol = ResidentPolicy.SCHEDULED if value else ResidentPolicy.HOST
+    elif isinstance(value, str):
+        try:
+            pol = ResidentPolicy(value)
+        except ValueError:
+            raise ValueError(
+                f"unknown resident mode {value!r} (want a ResidentPolicy, "
+                f"True/False, or one of "
+                f"{[p.value for p in ResidentPolicy]})") from None
+    else:
+        raise ValueError(f"unknown resident mode {value!r}")
+    if where not in _WARNED:
+        _WARNED.add(where)
+        warnings.warn(
+            f"{where}: resident={value!r} (plain bool/str) is deprecated; "
+            f"pass ResidentPolicy.{pol.name} instead",
+            DeprecationWarning, stacklevel=3)
+    return pol
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Frozen configuration of a :class:`~repro.pud.engine.PudEngine`.
+
+    ``resident=None`` defers to the backend default (SCHEDULED on
+    ``dram``, HOST elsewhere) — resolved by :meth:`resolved_resident`.
+    ``banks`` > 1 shards dram-backend work round-robin across a
+    :class:`~repro.core.bankarray.BankArray` of independent per-bank
+    chips (ignored by the jnp/pallas backends, which have no banks).
+    """
+
+    backend: str = "jnp"
+    module: str | None = None
+    noisy: bool = False
+    seed: int = 0
+    resident: ResidentPolicy | None = None
+    chain_blocks: bool = True
+    banks: int = 1
+
+    def __post_init__(self):
+        if self.banks < 1:
+            raise ValueError(f"banks must be >= 1, got {self.banks}")
+        if self.resident is not None \
+                and not isinstance(self.resident, ResidentPolicy):
+            # EngineConfig is the *new* API: it only holds enum members.
+            # (Legacy spellings are coerced at the PudEngine boundary.)
+            raise TypeError(
+                f"EngineConfig.resident wants a ResidentPolicy or None, "
+                f"got {self.resident!r}")
+
+    def resolved_resident(self) -> ResidentPolicy:
+        if self.resident is not None:
+            return self.resident
+        return (ResidentPolicy.SCHEDULED if self.backend == "dram"
+                else ResidentPolicy.HOST)
+
+    def with_(self, **changes) -> "EngineConfig":
+        """A copy with the given fields replaced (frozen-friendly)."""
+        return replace(self, **changes)

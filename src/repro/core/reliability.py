@@ -78,7 +78,7 @@ def plan(op: str | None = None, n: int | None = None,
          p: AnalogParams | None = None, noisy_vote: bool = True,
          program=None, mc_success: float | None = None, trials: int = 200,
          row_bits: int = 2048, seed: int = 0, module: str | None = None,
-         resident: bool | str = False, **kw) -> RedundancyPlan:
+         resident=None, **kw) -> RedundancyPlan:
     """Smallest odd replica count hitting ``target`` per-bit success.
 
     Two raw-success sources:

@@ -34,18 +34,37 @@ executor (``compiler.run_sim``) per chunk block.  ``add`` routes in-DRAM
 arithmetic the same way.
 
 Program execution on the dram backend defaults to the **scheduled
-resident-register** executor (``resident="scheduled"``): intermediates
-chain in-bank via RowClone instead of round-tripping through the host
-between instructions, the compile-time scheduler converts polarity spills
-into dual-form producer duplications, and chunk blocks chain through
-``ResidentSession`` (constant rows + pinned input words stay in the bank
-between blocks).  The ``OffloadReport`` books RowClones
-(``report.rowclones``) in place of most host staging writes
-(``report.staged_bytes``).  ``resident="greedy"`` is the bit-for-bit PR-3
-resident reference and ``resident=False`` the host-staged reference path.
-On the dram backend the report's dram-side cost is *measured* from the
-simulator's command log rather than modeled, so all modes are compared on
-the commands they actually issued.
+resident-register** executor (``ResidentPolicy.SCHEDULED``):
+intermediates chain in-bank via RowClone instead of round-tripping
+through the host between instructions, the compile-time scheduler
+converts polarity spills into dual-form producer duplications, and chunk
+blocks chain through ``ResidentSession`` (constant rows + pinned input
+words stay in the bank between blocks).  The ``OffloadReport`` books
+RowClones (``report.rowclones``) in place of most host staging writes
+(``report.staged_bytes``).  ``GREEDY`` is the bit-for-bit PR-3 resident
+reference and ``HOST`` the host-staged reference path (legacy
+``resident=True/False/"greedy"/"scheduled"`` spellings coerce with a
+one-shot DeprecationWarning).  On the dram backend the report's
+dram-side cost is *measured* from the simulator's command log rather
+than modeled, so all modes are compared on the commands they actually
+issued.
+
+The whole configuration can be passed as one frozen
+:class:`~repro.core.policy.EngineConfig`
+(``PudEngine(EngineConfig(backend="dram", banks=16))``); the individual
+kwargs keep working and build the equivalent config.
+
+**Multi-bank sharding** (``banks=N`` on the dram backend): the engine
+holds a :class:`~repro.core.bankarray.BankArray` of N independent
+per-bank chips (own decoder maps, static offsets and noise streams) and
+deals chunk blocks round-robin across them — block j runs on bank
+``j % N``.  Banks operate concurrently in real DRAM, so the array-level
+modeled time is the *makespan* over per-bank command logs (the
+``BankArray`` owns that accounting); the OffloadReport keeps per-bank
+sub-ledgers (``report.bank(b)``) next to the array totals.  Under the
+scheduled policy the ~0.5 s planner search runs once on bank 0 and
+sibling banks replay the frozen decisions.  ``banks=1`` is bit-for-bit
+the single-bank engine.
 """
 from __future__ import annotations
 
@@ -57,8 +76,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import compiler as CC
+from ..core.bankarray import BankArray
 from ..core.device import ENERGY_PJ, get_module
 from ..core.isa import CostModel, OpCost, PudIsa
+from ..core.policy import EngineConfig, ResidentPolicy, coerce_resident
 from ..core.simulator import BankSim
 from ..kernels import ops as kops
 
@@ -87,6 +108,23 @@ class OffloadReport:
     ``staged_bytes`` the bytes the host pushed over the bus to stage
     operand/reference rows — the resident executor's headline is cutting
     ``staged_bytes`` while ``rowclones`` grows.
+
+    **Field layout on a multi-bank engine** — two levels:
+
+    * *array level* (the fields above): ``ops``/``bits``/``cpu`` count
+      logical work and its processor-centric baseline — properties of
+      the workload, not of any bank — and ``dram``/``rowclones``/
+      ``staged_bytes`` accumulate the measured cost over **all** banks.
+    * *per bank* (``banks``): every simulator-executed call also books
+      its measured quantities into the sub-report of the bank it ran on
+      (``report.bank(b)``) — only ``dram``/``rowclones``/
+      ``staged_bytes`` are populated there (logical fields stay 0).
+
+    :meth:`merged` folds the per-bank ledgers back into one array-level
+    view; it matches the top-level measured side exactly for
+    simulator-executed traffic (modeled entries — e.g. ``popcount``,
+    which has no simulator path — are array-level only and not
+    attributed to a bank).
     """
 
     ops: int = 0
@@ -95,6 +133,32 @@ class OffloadReport:
     cpu: OpCost = field(default_factory=OpCost)
     rowclones: int = 0
     staged_bytes: int = 0
+    #: per-bank measured sub-reports (dram backend): bank index -> report
+    banks: dict = field(default_factory=dict)
+
+    def bank(self, b: int) -> "OffloadReport":
+        """The (auto-created) measured sub-report of one bank."""
+        sub = self.banks.get(b)
+        if sub is None:
+            sub = self.banks[b] = OffloadReport()
+        return sub
+
+    def merged(self) -> "OffloadReport":
+        """One array-level view folding the per-bank ledgers together:
+        logical fields copied from this report, measured fields summed
+        over ``banks`` (or copied verbatim when no bank ever booked —
+        non-dram backends)."""
+        m = OffloadReport(ops=self.ops, bits=self.bits, cpu=self.cpu)
+        if not self.banks:
+            m.dram, m.rowclones = self.dram, self.rowclones
+            m.staged_bytes = self.staged_bytes
+            return m
+        for b in sorted(self.banks):
+            sub = self.banks[b]
+            m.dram = m.dram + sub.dram
+            m.rowclones += sub.rowclones
+            m.staged_bytes += sub.staged_bytes
+        return m
 
     @property
     def energy_saving(self) -> float:
@@ -133,10 +197,25 @@ class PudEngine:
     #: min activation pairs swept per plane (region mixing in noisy mode)
     DRAM_MIN_PAIR_SWEEP = 4
 
-    def __init__(self, backend: str = "jnp", *, module: str | None = None,
+    def __init__(self, backend: "str | EngineConfig" = "jnp", *,
+                 config: EngineConfig | None = None,
+                 module: str | None = None,
                  noisy: bool = False, seed: int = 0,
-                 resident: bool | str | None = None,
-                 chain_blocks: bool = True):
+                 resident: "ResidentPolicy | bool | str | None" = None,
+                 chain_blocks: bool = True, banks: int = 1):
+        if isinstance(backend, EngineConfig):
+            if config is not None:
+                raise ValueError("pass the EngineConfig positionally or "
+                                 "as config=, not both")
+            config = backend
+        if config is not None:
+            backend = config.backend
+            module = config.module
+            noisy = config.noisy
+            seed = config.seed
+            resident = config.resident
+            chain_blocks = config.chain_blocks
+            banks = config.banks
         assert backend in BACKENDS, backend
         self.backend = backend
         self.module = get_module(module) if module else get_module()
@@ -144,61 +223,70 @@ class PudEngine:
         self.report = OffloadReport()
         self.noisy = noisy
         self.seed = seed
-        #: dram backend: how compiled programs execute.  Default (None):
-        #: the *scheduled* resident-register executor — intermediates
-        #: chain in-bank via RowClone under the compile-time polarity/
-        #: residency scheduler (duplication instead of polarity spills,
-        #: pinned input words across chunk blocks); the ~0.5 s planning
-        #: pass amortizes through a frozen-decision cache keyed on
-        #: (program, isa geometry).  ``"greedy"`` is the bit-for-bit PR-3
-        #: resident reference; ``False`` is the host-staged reference
-        #: path; ``True`` maps to ``"scheduled"``.
-        if resident is None:
-            resident = "scheduled" if backend == "dram" else False
-        elif resident is True:
-            resident = "scheduled"
-        if resident not in (False, "greedy", "scheduled"):
-            raise ValueError(f"unknown resident mode {resident!r}")
-        self.resident = resident
+        #: dram backend: how compiled programs execute — a
+        #: :class:`~repro.core.policy.ResidentPolicy`.  Default (None):
+        #: ``SCHEDULED`` on the dram backend — intermediates chain
+        #: in-bank via RowClone under the compile-time polarity/residency
+        #: scheduler (duplication instead of polarity spills, pinned
+        #: input words across chunk blocks); the ~0.5 s planning pass
+        #: amortizes through a frozen-decision cache keyed on (program,
+        #: isa geometry).  ``GREEDY`` is the bit-for-bit PR-3 resident
+        #: reference; ``HOST`` the host-staged reference path.  Legacy
+        #: plain ``True``/``False``/``"greedy"``/``"scheduled"`` coerce
+        #: with a one-shot DeprecationWarning.
+        self.policy = coerce_resident(
+            resident, where="PudEngine",
+            default=(ResidentPolicy.SCHEDULED if backend == "dram"
+                     else ResidentPolicy.HOST))
+        #: legacy tri-state spelling (``False`` | ``"greedy"`` |
+        #: ``"scheduled"``) — kept for callers that predate
+        #: :attr:`policy`; both always agree
+        self.resident = self.policy.to_legacy()
+        #: the full (frozen) configuration this engine runs under
+        self.config = EngineConfig(
+            backend=backend, module=module if isinstance(module, str)
+            else None, noisy=noisy, seed=seed, resident=self.policy,
+            chain_blocks=chain_blocks, banks=banks)
         #: resident mode: chain residency across chunk *blocks* — the
         #: in-bank constant rows block k leaves behind feed block k+1 via
         #: RowClone instead of fresh host writes (``False`` restores the
         #: PR-3 per-block restaging for comparison)
         self.chain_blocks = chain_blocks
+        #: dram backend: number of independent banks chunk blocks are
+        #: dealt across (round-robin); other backends have no banks
+        self.banks = banks
         self._isa: PudIsa | None = None
-        self._batched_isa: dict[int, PudIsa] = {}
-        #: per-block noise-stream derivation (chip identity stays ``seed``)
-        self._seed_seq = np.random.SeedSequence(seed)
+        self._array: BankArray | None = None
         if backend == "dram":
-            sim = BankSim(self.module, seed=seed,
-                          error_model="analog" if noisy else "ideal")
-            self._isa = PudIsa(sim)
+            #: N per-bank chips; bank 0 IS the single-bank engine's chip
+            #: (same seed, spawn-identical noise streams), so ``banks=1``
+            #: reproduces the legacy engine bit-for-bit
+            self._array = BankArray(
+                self.module, banks=banks, seed=seed,
+                error_model="analog" if noisy else "ideal")
+            self._isa = self._array.isa(0)
+        elif banks != 1:
+            raise ValueError(
+                f"banks={banks}: only the dram backend has banks")
 
-    def _next_noise_seed(self) -> int:
-        """A fresh, deterministic noise-stream seed for the next block."""
-        return int(self._seed_seq.spawn(1)[0].generate_state(1, np.uint64)[0])
-
-    def _isa_for(self, n_chunks: int, *, recycle: bool = True) -> PudIsa:
-        """ISA for one chunk block: a trial-batched BankSim with
-        ``n_chunks`` trials (cached per batch size; single-chunk work uses
-        the scalar sim).  Each call dedicates an independent noise stream
-        to the block — cached sims are *rebuilt* from ``self.seed`` per
-        batch size, so without reseeding, equal-trial blocks of different
-        calls (and the leading trials of different-size blocks) would draw
-        identical error patterns.  Row slots are recycled so the working
-        set stays bounded by one op's rows; ``recycle=False`` preserves
-        them (cross-block residency: a later block RowClones constant rows
-        an earlier block of the same size left in the bank)."""
+    def _isa_for(self, n_chunks: int, *, recycle: bool = True,
+                 bank: int = 0) -> PudIsa:
+        """ISA for one chunk block on one bank: a trial-batched BankSim
+        with ``n_chunks`` trials (cached per (bank, batch size);
+        single-chunk work uses the bank's scalar sim).  Each call
+        dedicates an independent noise stream to the block — cached sims
+        are *rebuilt* from the bank's identity seed per batch size, so
+        without reseeding, equal-trial blocks of different calls (and the
+        leading trials of different-size blocks) would draw identical
+        error patterns.  Row slots are recycled so the working set stays
+        bounded by one op's rows; ``recycle=False`` preserves them
+        (cross-block residency: a later block RowClones constant rows an
+        earlier block of the same size left in the bank)."""
         if n_chunks <= 1:
-            isa = self._isa
+            isa = self._array.isa(bank)
         else:
-            if n_chunks not in self._batched_isa:
-                sim = BankSim(self.module, seed=self.seed,
-                              error_model="analog" if self.noisy else "ideal",
-                              trials=n_chunks, track_unshared=False)
-                self._batched_isa[n_chunks] = PudIsa(sim)
-            isa = self._batched_isa[n_chunks]
-        isa.sim.reseed_noise(self._next_noise_seed())
+            isa = self._array.isa(bank, n_chunks, track_unshared=False)
+        isa.sim.reseed_noise(self._array.next_noise_seed(bank))
         if recycle:
             isa.sim.recycle_rows()
         return isa
@@ -228,10 +316,14 @@ class PudEngine:
             dram = self.cost_model.boolean(n)
         self.report.dram = self.report.dram + dram.scaled(rows)
 
-    def _account_sim_log(self, sim: BankSim, before: tuple) -> None:
+    def _account_sim_log(self, sim: BankSim, before: tuple,
+                         bank: int | None = None) -> None:
         """Fold the sim's command-log delta since ``before`` into the
         report's dram side: measured time/energy, host WR/RD bus bytes,
-        RowClone and staging counters.
+        RowClone and staging counters.  With ``bank`` given, the same
+        measured quantities are also booked into that bank's sub-report
+        (``report.bank(bank)``) so per-bank ledgers stay next to the
+        array totals.
 
         The sim log books WR/RD at on-die (array access) cost; the
         off-chip IO energy and burst transfer time that the modeled
@@ -246,15 +338,20 @@ class PudEngine:
         rd = counts.get("RD", 0)
         n_bursts = max(row_bytes // 64, 1)
         io_rows = wr + rd
-        self.report.dram = self.report.dram + OpCost(
+        cost = OpCost(
             (log.time_ns - t0)
             + io_rows * n_bursts * 4 * self.cost_model.t.tCK,
             (log.energy_pj - e0)
             + io_rows * n_bursts * ENERGY_PJ["io_per_64B"],
             commands=sum(counts.values()),
             bus_bytes=io_rows * row_bytes)
-        self.report.rowclones += counts.get("RC", 0)
-        self.report.staged_bytes += wr * row_bytes
+        targets = [self.report]
+        if bank is not None:
+            targets.append(self.report.bank(bank))
+        for rep in targets:
+            rep.dram = rep.dram + cost
+            rep.rowclones += counts.get("RC", 0)
+            rep.staged_bytes += wr * row_bytes
 
     @staticmethod
     def _log_snapshot(sim: BankSim) -> tuple:
@@ -400,7 +497,7 @@ class PudEngine:
         when the engine was built with ``resident=False``.
 
         Resident mode additionally chains residency across blocks
-        (``chain_blocks``): blocks of one size share a
+        (``chain_blocks``): blocks of one (bank, size) share a
         ``compiler.ResidentSession``, so the reference/identity constant
         rows block k staged stay in the bank and block k+1 RowClones them
         instead of paying fresh host writes — and under the scheduled
@@ -408,7 +505,19 @@ class PudEngine:
         word equals the previous block's (e.g. a broadcast operand)
         RowClones the pinned row instead of re-staging it.  Every block
         still gets its own noise stream (``reseed_noise``) — persistent
-        rows change what the host *writes*, not what the chip *draws*."""
+        rows change what the host *writes*, not what the chip *draws*.
+
+        An input plane whose row chunks are all *identical* (a broadcast
+        operand) is handed to each block as one ``(w,)`` word instead of
+        a ``(t, w)`` stack: the executor broadcasts it across the trial
+        axis, so it is staged into the bank once per block (and, pinned,
+        once per session) rather than once per chunk.
+
+        With ``banks > 1`` blocks are dealt round-robin across the
+        array — block j on bank ``j % banks`` — each bank chaining its
+        own sessions; under the scheduled policy bank 0's session runs
+        the planner search and sibling banks replay its frozen decisions
+        (plans are seed-dependent, decisions are not)."""
         r, c = shape
         n_bits = r * c * 32
         w = self._isa.width
@@ -416,28 +525,66 @@ class PudEngine:
             np.asarray(kops.ref.unpack_bits(p)).reshape(n_bits), w)
             for name, p in planes.items()}           # each (C, w)
         n_chunks = -(-n_bits // w)
+        # chunk-constant planes broadcast as one word per block (zero
+        # padding makes a ragged last chunk differ, disabling the
+        # collapse — conservative and correct)
+        const = {name: n_chunks > 1 and bool((ch == ch[0]).all())
+                 for name, ch in chunks.items()}
         blk_sz = self._block_size(n_chunks)
         pieces: dict[str, list[np.ndarray]] = {k: [] for k in prog.outputs}
-        chain = bool(self.resident) and self.chain_blocks
-        policy = self.resident
-        sessions: dict[int, CC.ResidentSession] = {}
-        for lo in range(0, n_chunks, blk_sz):
-            blk = {name: ch[lo:lo + blk_sz] for name, ch in chunks.items()}
-            t = next(iter(blk.values())).shape[0]
-            isa = self._isa_for(t, recycle=not (chain and t in sessions))
+        chain = self.policy.is_resident and self.chain_blocks
+        sessions: dict[tuple[int, int], CC.ResidentSession] = {}
+        shared = None       # bank-0 adjudicated decisions, non-chained
+
+        def bank0_fixed():
+            """Frozen scheduler decisions for sibling-bank replay: taken
+            from a bank-0 session that already planned, else computed
+            once on bank 0's scalar isa (memoized in _SCHED_CACHE)."""
+            for (b, _t), s in sessions.items():
+                if b == 0 and s._fixed is not None:
+                    return s._fixed
+            return CC.shared_schedule_decisions(prog, self._array.isa(0),
+                                                pin_inputs=chain)
+
+        for j, lo in enumerate(range(0, n_chunks, blk_sz)):
+            t = min(blk_sz, n_chunks - lo)
+            bank = j % self.banks
+            ins = {}
+            for name, ch in chunks.items():
+                ins[name] = (ch[0] if const[name]
+                             else ch[lo] if t == 1 else ch[lo:lo + t])
+            isa = self._isa_for(t, bank=bank,
+                                recycle=not (chain and (bank, t) in
+                                             sessions))
             before = self._log_snapshot(isa.sim)
-            ins = {k: v[0] for k, v in blk.items()} if t == 1 else blk
             if chain:
-                sess = sessions.get(t)
+                sess = sessions.get((bank, t))
                 if sess is None:
-                    sess = sessions[t] = CC.ResidentSession(prog, isa,
-                                                            policy=policy)
+                    fixed = None
+                    if (bank != 0
+                            and self.policy is ResidentPolicy.SCHEDULED):
+                        fixed = bank0_fixed()
+                    sess = sessions[(bank, t)] = CC.ResidentSession(
+                        prog, isa, policy=self.policy.value, fixed=fixed)
                 res = sess.run(ins)
             else:
-                res = CC.run_sim(prog, ins, isa, resident=self.resident)
+                plan = None
+                if (bank != 0
+                        and self.policy is ResidentPolicy.SCHEDULED):
+                    if shared is None:
+                        shared = bank0_fixed()
+                    plan = CC.schedule_resident(prog, isa,
+                                                policy="scheduled",
+                                                _fixed=shared)
+                res = CC.run_sim(prog, ins, isa, resident=self.policy,
+                                 plan=plan)
             if t == 1:
-                res = {k: v[None] for k, v in res.items()}
-            self._account_sim_log(isa.sim, before)
+                res = {k: np.asarray(v)[None] for k, v in res.items()}
+            else:       # (w,) pass-through of a broadcast input -> (t, w)
+                res = {k: (np.broadcast_to(v, (t, w))
+                           if np.asarray(v).ndim == 1 else v)
+                       for k, v in res.items()}
+            self._account_sim_log(isa.sim, before, bank=bank)
             for name in pieces:
                 pieces[name].append(res[name])
         out = {}
@@ -474,15 +621,16 @@ class PudEngine:
         chunks = self._to_chunks(bits, w)            # (n, C, w)
         blk_sz = self._block_size(chunks.shape[1])
         pieces = []
-        for lo in range(0, chunks.shape[1], blk_sz):
+        for j, lo in enumerate(range(0, chunks.shape[1], blk_sz)):
             blk = chunks[:, lo:lo + blk_sz]          # (n, C', w)
-            isa = self._isa_for(blk.shape[1])
+            bank = j % self.banks
+            isa = self._isa_for(blk.shape[1], bank=bank)
             before = self._log_snapshot(isa.sim)
             if blk.shape[1] == 1:
                 res = isa.nary_op(op, list(blk[:, 0]))[None]
             else:
                 res = isa.nary_op(op, blk)           # (C', w)
-            self._account_sim_log(isa.sim, before)
+            self._account_sim_log(isa.sim, before, bank=bank)
             pieces.append(res)
         out = np.concatenate(pieces, axis=0).reshape(-1)[:r * c * 32]
         return kops.ref.pack_bits(jnp.asarray(out.reshape(r, c * 32)))
@@ -496,15 +644,16 @@ class PudEngine:
         chunks = self._to_chunks(bits, w)            # (C, w)
         blk_sz = self._block_size(chunks.shape[0])
         pieces = []
-        for lo in range(0, chunks.shape[0], blk_sz):
+        for j, lo in enumerate(range(0, chunks.shape[0], blk_sz)):
             blk = chunks[lo:lo + blk_sz]
-            isa = self._isa_for(blk.shape[0])
+            bank = j % self.banks
+            isa = self._isa_for(blk.shape[0], bank=bank)
             before = self._log_snapshot(isa.sim)
             if blk.shape[0] == 1:
                 res = isa.op_not(blk[0])[None]
             else:
                 res = isa.op_not(blk)                # (C', w)
-            self._account_sim_log(isa.sim, before)
+            self._account_sim_log(isa.sim, before, bank=bank)
             pieces.append(res)
         out = np.concatenate(pieces, axis=0).reshape(-1)[:r * c * 32]
         return kops.ref.pack_bits(jnp.asarray(out.reshape(r, c * 32)))

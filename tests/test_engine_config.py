@@ -1,0 +1,192 @@
+"""EngineConfig + ResidentPolicy: the PR-6 API redesign and its shims.
+
+Contract under test:
+
+* new spellings (``ResidentPolicy`` members, ``EngineConfig``) are
+  accepted at all three layers — ``PudEngine``, ``compiler.run_sim``,
+  ``charz.mc_program_success`` — and never warn,
+* legacy plain ``bool``/``str`` spellings still work everywhere and emit
+  exactly one ``DeprecationWarning`` per call site,
+* ``EngineConfig`` is frozen, validates its fields, and drives
+  ``PudEngine`` identically to the equivalent kwargs.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import charz
+from repro.core import compiler as CC
+from repro.core import policy
+from repro.core.isa import PudIsa
+from repro.core.policy import EngineConfig, ResidentPolicy, coerce_resident
+from repro.core.simulator import BankSim
+from repro.pud.engine import PudEngine
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_state():
+    policy.reset_deprecation_warnings()
+    yield
+    policy.reset_deprecation_warnings()
+
+
+# ---------------------------------------------------------------------------
+# ResidentPolicy
+# ---------------------------------------------------------------------------
+def test_policy_members_and_legacy_mapping():
+    assert ResidentPolicy.HOST.to_legacy() is False
+    assert ResidentPolicy.GREEDY.to_legacy() == "greedy"
+    assert ResidentPolicy.SCHEDULED.to_legacy() == "scheduled"
+    assert not ResidentPolicy.HOST.is_resident
+    assert ResidentPolicy.GREEDY.is_resident
+    assert ResidentPolicy.SCHEDULED.is_resident
+    # str-subclass members flow through existing string plumbing
+    assert ResidentPolicy.SCHEDULED in ("greedy", "scheduled")
+    # ...which is exactly why truthiness must never be used as the test:
+    assert bool(ResidentPolicy.HOST)          # non-empty str is truthy
+
+
+def test_coerce_spellings():
+    assert coerce_resident(None, where="t") is ResidentPolicy.HOST
+    assert coerce_resident(None, where="t",
+                           default=ResidentPolicy.SCHEDULED) \
+        is ResidentPolicy.SCHEDULED
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert coerce_resident(True, where="t1") \
+            is ResidentPolicy.SCHEDULED
+        assert coerce_resident(False, where="t2") is ResidentPolicy.HOST
+        assert coerce_resident("greedy", where="t3") \
+            is ResidentPolicy.GREEDY
+    with pytest.raises(ValueError):
+        coerce_resident("turbo", where="t4")
+    with pytest.raises(ValueError):
+        coerce_resident(3.5, where="t5")
+
+
+def test_coerce_warns_once_per_call_site():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        coerce_resident(True, where="site_a")
+        coerce_resident(True, where="site_a")      # same site: silent
+        coerce_resident(True, where="site_b")      # new site: warns
+    assert len(w) == 2
+    assert all(issubclass(x.category, DeprecationWarning) for x in w)
+    policy.reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        coerce_resident(False, where="site_a")     # reset: warns again
+    assert len(w) == 1
+
+
+def test_enum_spellings_never_warn_anywhere():
+    prog = charz.get_program("xor")
+    isa = PudIsa(BankSim(row_bits=128, error_model="ideal", seed=0))
+    ins = {"a": np.ones(64, np.uint8), "b": np.zeros(64, np.uint8)}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        PudEngine("dram", resident=ResidentPolicy.GREEDY)
+        PudEngine("dram")                              # None = default
+        CC.run_sim(prog, dict(ins), isa,
+                   resident=ResidentPolicy.SCHEDULED)
+        CC.run_sim(prog, dict(ins), isa)               # None = host
+        charz.mc_program_success("xor", trials=4, groups=2,
+                                 row_bits=1024,
+                                 resident=ResidentPolicy.SCHEDULED)
+
+
+@pytest.mark.parametrize("layer,call", [
+    ("PudEngine",
+     lambda: PudEngine("dram", resident="scheduled")),
+    ("compiler.run_sim",
+     lambda: CC.run_sim(
+         charz.get_program("xor"),
+         {"a": np.ones(64, np.uint8), "b": np.zeros(64, np.uint8)},
+         PudIsa(BankSim(row_bits=128, error_model="ideal", seed=0)),
+         resident=False)),
+    ("charz.mc_program_success",
+     lambda: charz.mc_program_success("xor", trials=4, groups=2,
+                                      row_bits=1024, resident=True)),
+])
+def test_legacy_spellings_warn_at_every_layer(layer, call):
+    with pytest.warns(DeprecationWarning, match=layer):
+        call()
+    # warn-once: a second identical call stays silent
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        call()
+    assert not [x for x in w if issubclass(x.category,
+                                           DeprecationWarning)]
+
+
+def test_legacy_resident_attr_spellings_kept():
+    assert PudEngine("dram").resident == "scheduled"
+    assert PudEngine("jnp").resident is False
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert PudEngine("dram", resident="greedy").resident == "greedy"
+        assert PudEngine("dram", resident=False).resident is False
+    assert PudEngine("dram").policy is ResidentPolicy.SCHEDULED
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig
+# ---------------------------------------------------------------------------
+def test_engine_config_frozen_and_validated():
+    cfg = EngineConfig(backend="dram", banks=4)
+    with pytest.raises(Exception):      # frozen dataclass
+        cfg.banks = 8
+    with pytest.raises(ValueError):
+        EngineConfig(banks=0)
+    with pytest.raises(TypeError):      # new API holds enums only
+        EngineConfig(resident="scheduled")
+    assert cfg.resolved_resident() is ResidentPolicy.SCHEDULED
+    assert EngineConfig().resolved_resident() is ResidentPolicy.HOST
+    assert EngineConfig(
+        resident=ResidentPolicy.GREEDY).resolved_resident() \
+        is ResidentPolicy.GREEDY
+    assert cfg.with_(banks=2).banks == 2
+    assert cfg.with_(banks=2) is not cfg
+
+
+def test_engine_accepts_config():
+    cfg = EngineConfig(backend="dram", noisy=False, seed=9, banks=2,
+                       resident=ResidentPolicy.GREEDY,
+                       chain_blocks=False)
+    eng = PudEngine(cfg)
+    assert eng.backend == "dram"
+    assert eng.seed == 9
+    assert eng.banks == 2
+    assert eng.policy is ResidentPolicy.GREEDY
+    assert eng.resident == "greedy"
+    assert eng.chain_blocks is False
+    assert eng.config == cfg
+    # config= keyword is equivalent; both at once is an error
+    assert PudEngine(config=cfg).config == cfg
+    with pytest.raises(ValueError):
+        PudEngine(cfg, config=cfg)
+
+
+def test_engine_config_equivalent_to_kwargs():
+    import jax.numpy as jnp
+
+    prog = charz.get_program("xor")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 2 ** 32, (2, 64), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2 ** 32, (2, 64), dtype=np.uint32))
+    e1 = PudEngine(EngineConfig(backend="dram", seed=3))
+    e2 = PudEngine("dram", seed=3)
+    o1 = e1.run_program(prog, {"a": a, "b": b})["out"]
+    o2 = e2.run_program(prog, {"a": a, "b": b})["out"]
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert e1.report.summary() == e2.report.summary()
+
+
+def test_reliability_plan_passthrough_stays_silent():
+    """reliability.plan forwards resident= to the MC; its default must
+    not trip the deprecation shim."""
+    from repro.core import reliability as R
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        R.plan(program="xor", target=0.99, trials=4, row_bits=1024)
