@@ -14,7 +14,12 @@ bytes.  The BankArray counters are gated the same way:
 ``bankarray.parity_mismatch_bits`` (BankArray(banks=1) must stay
 bit-for-bit a plain BankSim) and ``bankarray.reduce_mismatch_lanes``
 (the cross-bank reduction tree must stay arithmetically exact) are both
-0 in the baseline, so any increase fails.
+0 in the baseline, so any increase fails.  The fused-execution counters
+follow the same contract: ``fused.fused_parity_mismatch_bits`` (the
+bank-stacked path must stay bit-identical to the per-bank loop),
+``fused.success_delta_pts`` (fused MC success rates must equal the loop
+path's exactly) and ``fused.occupancy_regression_ns`` (the occupancy
+dealer's makespan must never exceed round-robin's) are all 0.
 
 Usage:
     python -m benchmarks.diff_bench NEW.json [BASELINE.json] [--tol 2.0]
@@ -45,7 +50,9 @@ def _success_keys(snap: dict) -> dict[str, float]:
             ("resident_v2_detail", "resident_v2",
              ("scheduled_success",)),
             ("bankarray_detail", "bankarray",
-             ("success_b1", "success_b16"))):
+             ("success_b1", "success_b16")),
+            ("fused_detail", "fused",
+             ("loop_success", "fused_success"))):
         for name, d in snap.get(section, {}).items():
             if not isinstance(d, dict):   # section-level scalar counters
                 continue
@@ -66,6 +73,11 @@ def _counter_keys(snap: dict) -> dict[str, float]:
     for kind in ("parity_mismatch_bits", "reduce_mismatch_lanes"):
         if kind in ba:
             out[f"bankarray.{kind}"] = float(ba[kind])
+    fu = snap.get("fused_detail", {})
+    for kind in ("fused_parity_mismatch_bits", "success_delta_pts",
+                 "occupancy_regression_ns"):
+        if kind in fu:
+            out[f"fused.{kind}"] = float(fu[kind])
     return out
 
 

@@ -18,15 +18,22 @@ Prints CSV sections:
     round-robin over N independent per-bank chips — modeled DRAM-time
     (makespan) throughput at 16 banks vs 1, single-bank bit parity with
     the plain BankSim path, and a cross-bank popcount reduction tree,
+  * fused multi-bank MC: the bank axis stacked onto the trial axis —
+    wall-clock throughput of the fused path vs the per-bank loop at 4
+    and 16 banks (bit-identical results, exact parity gate), plus the
+    occupancy-aware group dealer's makespan on uneven loads,
   * in-DRAM vs CPU cost model (the paper's motivation, Table-style),
   * kernel micro-benchmarks (packed-op throughput on this host),
   * PuD-engine offload accounting on LM workloads.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]
+                                             [--only SECTION]...
 
 ``--json`` additionally writes machine-readable timings + success-rate
-deltas (default path BENCH_pr6.json) so CI can archive the trajectory;
+deltas (default path BENCH_pr7.json) so CI can archive the trajectory;
 ``benchmarks.diff_bench`` compares snapshots across PRs/nightlies.
+``--only`` (repeatable) runs just the named sections — see
+``_sections`` for the keys (e.g. ``--only fused --only bankarray``).
 """
 from __future__ import annotations
 
@@ -660,6 +667,149 @@ def multi_bank_scaling(fast=False):
     return sp
 
 
+def fused_multibank(fast=False):
+    """Fused multi-bank MC: the bank axis stacked onto the trial axis.
+
+    An N-bank, T-trial sweep runs as one ``(N*tg, rows, bits)`` array
+    pass per round instead of N per-bank episodes
+    (``repro.core.fused``), paying the per-command host overhead once.
+    Three measurements:
+
+    * **wall-clock throughput vs banks** — the same MC estimate (raw op,
+      NOT protocol, compiled program) through the loop reference
+      (``fused=False``) and the fused path at 4 and 16 banks;
+      acceptance target: >= 6x wall-clock at 16 banks on the raw-op
+      characterization sweep (the headline ``fused_speedup_16``; the
+      small NOT/program points are setup-dominated at benchmark sizes
+      and reported informationally), with every success rate *exactly*
+      equal to the loop path's (the fused path is bit-identical per
+      bank, so the deltas must be +0.00),
+    * **fused parity** — loop-vs-fused engine runs (nary / NOT /
+      compiled program on the dram backend, numpy resolve) compared
+      bit-for-bit; ``fused_parity_mismatch_bits`` must stay 0,
+    * **occupancy dealer** — a mixed-fan-in, uneven group load dealt
+      ``round_robin`` vs ``occupancy`` (greedy least-loaded on live
+      ``bank_time_ns``): the occupancy makespan must not exceed
+      round-robin's (``occupancy_regression_ns`` gated at 0).
+    """
+    import jax.numpy as jnp
+    from repro.core import charz
+    from repro.core.bankarray import BankArray
+    from repro.core.policy import EngineConfig
+    from repro.pud.engine import PudEngine
+
+    trials = 192 if fast else 384
+    groups = 48                      # divisible by 4 and by 16
+    points = [
+        ("and16", lambda b, f, st: charz.mc_boolean_success(
+            "and", 16, trials=trials, groups=groups, banks=b, fused=f,
+            stats=st)),
+        ("not4", lambda b, f, st: charz.mc_not_success(
+            4, trials=trials, groups=groups, banks=b, fused=f, stats=st)),
+        ("xor", lambda b, f, st: charz.mc_program_success(
+            "xor", trials=trials, groups=groups, banks=b, fused=f,
+            stats=st)),
+    ]
+    # warm pair inventories / program caches so neither path pays
+    # first-call costs inside a timed region
+    points[0][1](4, True, None)
+    points[2][1](4, True, None)
+    rows = []
+    detail = {}
+    max_delta = 0.0
+    speedup = 0.0
+    for banks in (4, 16):
+        for name, fn in points:
+            t0 = time.perf_counter()
+            v_loop = float(fn(banks, False, None))
+            t_loop = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            v_fused = float(fn(banks, True, None))
+            t_fused = time.perf_counter() - t0
+            sp = t_loop / t_fused
+            if banks == 16 and name == "and16":
+                speedup = sp
+            max_delta = max(max_delta, abs(v_fused - v_loop))
+            rows.append((name, banks, trials, round(t_loop, 3),
+                         round(t_fused, 3), round(sp, 1),
+                         round(100 * v_loop, 2), round(100 * v_fused, 2),
+                         round(100 * (v_fused - v_loop), 2)))
+            detail[f"{name}_b{banks}"] = {
+                "banks": banks, "trials": trials, "groups": groups,
+                "loop_s": t_loop, "fused_s": t_fused, "speedup": sp,
+                "loop_success": v_loop, "fused_success": v_fused,
+            }
+    _csv("Fused multi-bank MC: loop vs bank-stacked episodes "
+         "(equal trials)",
+         rows,
+         "point,banks,trials,loop_s,fused_s,speedup,"
+         "loop_succ,fused_succ,delta")
+    _p(f"fused 16-bank wall-clock speedup (raw-op sweep): {speedup:.1f}x "
+       f"(target >= 6x); max success delta {100 * max_delta:.2f} pts "
+       f"(target 0.00)")
+
+    # fused parity through the engine stack: nary / NOT / program
+    rng = np.random.default_rng(9)
+
+    def mk(r, c):
+        return jnp.asarray(rng.integers(0, 2 ** 32, (r, c),
+                                        dtype=np.uint32))
+
+    def xor_bits(a, b):
+        x = np.bitwise_xor(np.asarray(a), np.asarray(b))
+        return int(np.unpackbits(x.view(np.uint8)).sum())
+
+    el = PudEngine(EngineConfig(backend="dram", banks=4, noisy=True,
+                                fused=False))
+    ef = PudEngine(EngineConfig(backend="dram", banks=4, noisy=True,
+                                fused=True))
+    x, y = mk(6, 9), mk(6, 9)
+    mism = xor_bits(el.nary(jnp.stack([x, y]), "nand"),
+                    ef.nary(jnp.stack([x, y]), "nand"))
+    mism += xor_bits(el.not_(x), ef.not_(x))
+    prog = charz.get_program("xor")
+    ol = el.run_program(prog, {"a": x, "b": y})
+    of = ef.run_program(prog, {"a": x, "b": y})
+    mism += sum(xor_bits(ol[k], of[k]) for k in prog.outputs)
+    detail["fused_parity_mismatch_bits"] = mism
+    detail["success_delta_pts"] = 100 * max_delta
+    _p(f"fused engine parity mismatches: {mism} bits (target 0)")
+
+    # occupancy dealer: mixed fan-ins, groups not divisible by banks
+    works = [("and", 16)] * 3 + [("and", 2)] * 7
+    weights = [float(n) for _op, n in works]
+    span = {}
+    for dealer in ("round_robin", "occupancy"):
+        arr = BankArray(banks=4, row_bits=512, seed=2,
+                        error_model="analog", trials=8,
+                        track_unshared=False)
+        wrng = np.random.default_rng(3)
+        deal = charz._deal_groups(
+            arr, len(works), dealer,
+            weights if dealer == "occupancy" else None)
+        for g, b in enumerate(deal):
+            isa = arr.isa(b)
+            isa.sim.recycle_rows()
+            op, n = works[g]
+            ops = charz._random_bits(wrng, (8, n, isa.width))
+            isa.nary_op(op, ops.swapaxes(0, 1))
+        span[dealer] = arr.makespan_ns()
+    impr = 1.0 - span["occupancy"] / span["round_robin"]
+    detail["occupancy"] = {
+        "round_robin_makespan_ns": span["round_robin"],
+        "occupancy_makespan_ns": span["occupancy"],
+        "improvement": impr,
+    }
+    detail["occupancy_regression_ns"] = max(
+        0.0, span["occupancy"] - span["round_robin"])
+    _p(f"occupancy dealer makespan: {span['occupancy'] / 1e3:.1f}us vs "
+       f"round-robin {span['round_robin'] / 1e3:.1f}us "
+       f"({100 * impr:.1f}% better)")
+    RESULTS["fused_detail"] = detail
+    RESULTS["fused_speedup_16"] = speedup
+    return speedup
+
+
 def calibration_scorecard():
     from repro.core import analog as A
     from repro.core import calibrate as C
@@ -759,35 +909,66 @@ def _json_path(argv) -> str | None:
     i = argv.index("--json")
     if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
         return argv[i + 1]
-    return "BENCH_pr6.json"
+    return "BENCH_pr7.json"
+
+
+def _sections(fast: bool, mc: bool):
+    """Ordered (name, runner) section registry — the ``--only`` keys."""
+    return [
+        ("fig5", fig5_coverage),
+        ("fig7", lambda: fig7_not(mc=mc)),
+        ("fig8", fig8_patterns),
+        ("fig9", fig9_distance),
+        ("fig10_12", fig10_12_not_modifiers),
+        ("fig15", lambda: fig15_ops(mc=mc)),
+        ("fig16", fig16_kdep),
+        ("fig17_21", fig17_21_op_modifiers),
+        ("charz_speedup", lambda: charz_batched_speedup(fast=fast)),
+        ("program_speedup", lambda: program_mc_speedup(fast=fast)),
+        ("resident", lambda: resident_vs_staged(fast=fast)),
+        ("scheduled", lambda: scheduled_vs_greedy(fast=fast)),
+        ("resident_v2", lambda: resident_v2(fast=fast)),
+        ("bankarray", lambda: multi_bank_scaling(fast=fast)),
+        ("fused", lambda: fused_multibank(fast=fast)),
+        ("calibration", calibration_scorecard),
+        ("cost_model", cost_model_table),
+        ("reliability", reliability_planning),
+        ("kernels", lambda: kernel_microbench(fast=fast)),
+        ("pud_offload", pud_offload_lm),
+    ]
+
+
+def _only_filter(argv) -> list[str]:
+    """Section names selected by ``--only NAME`` (repeatable)."""
+    names = []
+    for i, a in enumerate(argv):
+        if a == "--only":
+            if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+                raise SystemExit("--only needs a section name")
+            names.append(argv[i + 1])
+    return names
 
 
 def main() -> None:
     fast = "--fast" in sys.argv
     json_path = _json_path(sys.argv)
+    only = _only_filter(sys.argv)
     mc = True          # MC columns are cheap now that the MC is batched
+    sections = _sections(fast, mc)
+    known = [n for n, _fn in sections]
+    for n in only:
+        if n not in known:
+            raise SystemExit(f"--only {n}: unknown section "
+                             f"(one of {', '.join(known)})")
     t0 = time.time()
     _p("# FCDRAM-JAX benchmark suite (one section per paper figure)")
     RESULTS["fast"] = fast
-    fig5_coverage()
-    fig7_not(mc=mc)
-    fig8_patterns()
-    fig9_distance()
-    fig10_12_not_modifiers()
-    fig15_ops(mc=mc)
-    fig16_kdep()
-    fig17_21_op_modifiers()
-    charz_batched_speedup(fast=fast)
-    program_mc_speedup(fast=fast)
-    resident_vs_staged(fast=fast)
-    scheduled_vs_greedy(fast=fast)
-    resident_v2(fast=fast)
-    multi_bank_scaling(fast=fast)
-    calibration_scorecard()
-    cost_model_table()
-    reliability_planning()
-    kernel_microbench(fast=fast)
-    pud_offload_lm()
+    if only:
+        RESULTS["only"] = only
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        fn()
     total = time.time() - t0
     _p(f"\ntotal {total:.1f}s")
     if json_path:

@@ -119,6 +119,11 @@ class BankArray:
         self._noise_seqs = [np.random.SeedSequence(s)
                             for s in self.bank_seeds]
         self._isas: dict[tuple[int, int | None], PudIsa] = {}
+        # fused (bank-stacked) ISAs live in their own registry: their keys
+        # are (n_banks, trials, overrides), not (bank, ...), and one fused
+        # sim's command log accounts to *all* of its banks (concurrent
+        # banks run the same command stream under fusion)
+        self._fused: dict[tuple, "FusedPudIsa"] = {}
 
     # ------------- device addressing -------------
     def __len__(self) -> int:
@@ -141,6 +146,33 @@ class BankArray:
                           trials=t, **{**self._sim_kwargs, **overrides})
             self._isas[key] = PudIsa(sim, bank=bank)
         return self._isas[key]
+
+    def fused_isa(self, n_banks: int | None = None,
+                  trials: int | None = ..., **overrides):
+        """One bank-stacked :class:`~repro.core.fused.FusedPudIsa` over
+        the first ``n_banks`` banks (default: all) at ``trials`` per
+        bank — a single ``(n_banks * trials, rows, bits)`` episode that
+        is bit-identical per bank to the loop path (see
+        ``repro.core.fused``).  Cached per ``(n_banks, trials,
+        overrides)`` like :meth:`isa`; ``track_unshared`` is forced off
+        (fusion requires it, and trial-batched loop sims run that way
+        too)."""
+        from .fused import FusedBankSim, FusedPudIsa
+        k = self.banks if n_banks is None else int(n_banks)
+        if not 1 <= k <= self.banks:
+            raise ValueError(f"n_banks must be in 1..{self.banks}, got {k}")
+        t = self.trials if trials is ... else trials
+        if t is None or int(t) < 1:
+            raise ValueError("fused execution is trial-batched: trials "
+                             f"must be >= 1 per bank, got {t}")
+        key = (k, t, tuple(sorted(overrides.items())))
+        if key not in self._fused:
+            kw = {**self._sim_kwargs, **overrides}
+            kw.pop("track_unshared", None)
+            sim = FusedBankSim(self.module, bank_seeds=self.bank_seeds[:k],
+                               trials=int(t), **kw)
+            self._fused[key] = FusedPudIsa(sim)
+        return self._fused[key]
 
     def __getitem__(self, bank: int) -> PudIsa:
         return self.isa(bank)
@@ -172,10 +204,16 @@ class BankArray:
 
     # ------------- modeled concurrent-bank time -------------
     def bank_time_ns(self) -> list[float]:
-        """Per-bank simulated command time (sum over that bank's sims)."""
+        """Per-bank simulated command time (sum over that bank's sims).
+        A fused sim's commands run on all of its banks concurrently, so
+        its log time accrues to each of banks ``0..n_banks-1``."""
         out = [0.0] * self.banks
         for (b, *_), isa in self._isas.items():
             out[b] += isa.sim.log.time_ns
+        for (k, *_), fisa in self._fused.items():
+            t = fisa.sim.log.time_ns
+            for b in range(k):
+                out[b] += t
         return out
 
     def makespan_ns(self) -> float:

@@ -40,7 +40,8 @@ from . import compiler as CC
 from . import decoder as DEC
 from .analog import CLOSE, FAR, MIDDLE
 from .bankarray import BankArray
-from .device import MODULE_ZOO, get_module
+from .device import MODULE_ZOO, ActivationSupport, get_module
+from .fused import FusedGeometryError
 from .isa import PudIsa
 from .policy import ResidentPolicy, coerce_resident
 from .simulator import BankSim
@@ -54,6 +55,53 @@ TEMPS = (50, 60, 70, 80, 95)
 #: default number of stratified activation pairs per batched MC estimate —
 #: one per (compute-region, reference-region) combination.
 MC_PAIR_GROUPS = 9
+
+#: group-dealing strategies for multi-bank MC sweeps
+DEALERS = ("round_robin", "occupancy")
+
+
+def _check_banks(banks, *, batched: bool) -> int:
+    """Validate the ``banks`` argument of the mc_* entry points."""
+    if isinstance(banks, bool) or not isinstance(banks, (int, np.integer)):
+        raise TypeError(
+            f"banks must be an int, got {type(banks).__name__}")
+    banks = int(banks)
+    if banks > 1 and not batched:
+        raise ValueError(
+            "banks > 1 requires batched=True (the per-trial reference "
+            "path is single-bank)")
+    return banks
+
+
+def _use_fused(fused: bool | None, module, banks: int,
+               dealer: str = "round_robin", *,
+               resident: bool = False) -> bool:
+    """Settle the ``fused`` tri-state of an MC sweep.
+
+    ``None`` (auto) fuses exactly when it is profitable *and* provably
+    loop-parity-safe: more than one bank, round-robin dealing (the fused
+    group->bank layout is bank-major round-robin by construction), a
+    simultaneous-activation module (sequential modules retry decoder
+    misses per bank, so command sequences diverge), and host-staged
+    execution (resident row plans are seed-dependent per bank).
+    ``True`` forces fusion — raising :class:`FusedGeometryError` when one
+    of those conditions rules it out — and ``False`` forces the loop."""
+    reasons = []
+    if dealer != "round_robin":
+        reasons.append("occupancy dealing breaks the bank-major group "
+                       "layout fusion requires")
+    if module.activation is not ActivationSupport.SIMULTANEOUS:
+        reasons.append(f"{module.name} activates sequentially (per-bank "
+                       "decoder-miss retries diverge)")
+    if resident:
+        reasons.append("resident execution chains seed-dependent per-bank "
+                       "row plans")
+    if fused is None:
+        return banks > 1 and not reasons
+    if fused and reasons:
+        raise FusedGeometryError(
+            "fused=True but fusion cannot apply: " + "; ".join(reasons))
+    return bool(fused)
 
 
 # ---------------------------------------------------------------------------
@@ -101,25 +149,88 @@ def _stratified_pairs(isa: PudIsa, n_rf: int, n_rl: int,
     return out
 
 
-def _bank_pair_schedule(arr: BankArray, groups: int, pairs_of):
-    """Deal MC pair groups round-robin across the array's banks.
+def _deal_groups(arr: BankArray, n_groups: int,
+                 dealer: str = "round_robin",
+                 weights=None) -> list[int]:
+    """Bank index for each of ``n_groups`` MC group slots.
 
-    Global group slot g runs on bank ``g % banks``, consuming that bank's
-    own stratified pair list (``pairs_of(isa)``) in order — each bank
-    sweeps the 3x3 region grid of *its own chip* while the total group
-    count stays ``groups``-bounded.  With ``banks=1`` this yields exactly
-    the single-bank pair sequence (bit-for-bit the legacy estimate); with
-    N banks the modeled makespan drops ~1/N because the groups execute on
+    ``round_robin`` (default, the reproducible reference): group g runs
+    on bank ``g % banks``.  ``occupancy`` deals each group to the bank
+    with the smallest *projected* command time — its live
+    ``bank_time_ns`` plus the ``weights`` (estimated per-group cost,
+    uniform by default) of groups already dealt to it in this call —
+    which tightens the modeled makespan whenever loads are uneven
+    (``n_groups % banks != 0``, mixed fan-ins, or a pre-loaded array).
+    Greedy least-loaded dealing changes which chip measures which group,
+    so it trades bit-reproducibility of the round-robin estimate for
+    makespan (same target statistic).
+    """
+    if dealer not in DEALERS:
+        raise ValueError(f"unknown dealer {dealer!r} (want one of "
+                         f"{DEALERS})")
+    if dealer == "round_robin":
+        return [g % arr.banks for g in range(n_groups)]
+    load = [float(t) for t in arr.bank_time_ns()]
+    if weights is None:
+        w = [1.0] * n_groups
+    else:
+        w = [float(x) for x in weights]
+        if len(w) != n_groups:
+            raise ValueError(f"want {n_groups} weights, got {len(w)}")
+    out = []
+    for g in range(n_groups):
+        b = min(range(arr.banks), key=lambda i: (load[i], i))
+        load[b] += w[g]
+        out.append(b)
+    return out
+
+
+def _bank_pair_schedule(arr: BankArray, groups: int, pairs_of, *,
+                        dealer: str = "round_robin", weights=None):
+    """Deal MC pair groups across the array's banks (:func:`_deal_groups`).
+
+    Each dealt group consumes its bank's own stratified pair list
+    (``pairs_of(isa)``) in order — each bank sweeps the 3x3 region grid
+    of *its own chip* while the total group count stays
+    ``groups``-bounded.  With ``banks=1`` this yields exactly the
+    single-bank pair sequence (bit-for-bit the legacy estimate); with N
+    banks the modeled makespan drops ~1/N because the groups execute on
     independent banks concurrently.  Yields ``(isa, pair)`` in run order.
     """
     its = {}
-    for g in range(groups):
-        b = g % arr.banks
+    for b in _deal_groups(arr, groups, dealer, weights):
         if b not in its:
             its[b] = iter(pairs_of(arr.isa(b)))
         pair = next(its[b], None)
         if pair is not None:        # a bank may drop decoder-miss groups
             yield arr.isa(b), pair
+
+
+def _fused_mc_rounds(arr: BankArray, groups: int, run_round) -> None:
+    """Drive one fused MC sweep as ``ceil(groups / banks)`` rounds.
+
+    Round r executes the round-robin layout's groups ``r*banks ..
+    r*banks+banks-1`` — one per bank — as a single fused episode on
+    ``arr.fused_isa()``.  A tail round (``groups % banks != 0``) runs on
+    a bank-subset fused ISA that *continues* the first banks' noise
+    counters and pair cursors (:meth:`FusedPudIsa.adopt_state`), so per
+    bank the command/noise streams are exactly the loop path's.
+    ``run_round(fisa, r)`` performs round r's draws, ops and accounting.
+    """
+    full, tail = divmod(groups, arr.banks)
+    fisa = arr.fused_isa() if full else None
+    for r in range(full):
+        run_round(fisa, r)
+    if tail:
+        ft = arr.fused_isa(n_banks=tail)
+        if fisa is not None:
+            ft.adopt_state(fisa)
+        run_round(ft, full)
+        if fisa is not None:
+            # fold the tail's cursor/counter advances back so the next
+            # sweep's full rounds continue each bank's stream exactly
+            # where the loop path would
+            fisa.absorb_state(ft)
 
 
 def _fill_stats(stats: dict | None, arr: BankArray, groups: int,
@@ -158,6 +269,8 @@ def mc_boolean_success(op: str, n: int, *, trials: int = 200,
                        module: str | None = None, temp_c: float = 50.0,
                        batched: bool = True, banks: int = 1,
                        groups: int = MC_PAIR_GROUPS,
+                       fused: bool | None = None,
+                       dealer: str = "round_robin",
                        stats: dict | None = None) -> float:
     """Cell-averaged MC success of an n-input op on the noisy simulator.
 
@@ -166,18 +279,25 @@ def mc_boolean_success(op: str, n: int, *, trials: int = 200,
     ``batched=False`` path runs one episode per trial with a scrambled pair
     walk (same target statistic, ~10-30x slower).
 
-    ``banks`` shards the stratified pair groups round-robin across a
+    ``banks`` shards the stratified pair groups across a
     :class:`~repro.core.bankarray.BankArray` of independent per-bank
-    chips (group g runs on bank ``g % banks`` with that bank's own
-    stratified pair walk) — the estimate then averages over *chips* as
-    well as regions, like the paper's multi-chip protocol.  ``banks=1``
-    is bit-for-bit the single-``BankSim`` path.  ``stats``, if a dict,
-    receives the modeled concurrent-bank timing (per-bank time,
-    makespan).
+    chips (``dealer`` picks the group->bank mapping, round-robin by
+    default — see :func:`_deal_groups`) — the estimate then averages
+    over *chips* as well as regions, like the paper's multi-chip
+    protocol.  ``banks=1`` is bit-for-bit the single-``BankSim`` path.
+
+    ``fused`` stacks the bank axis onto the trial axis so each round of
+    ``banks`` groups runs as **one** ``(banks*tg, rows, bits)`` episode
+    (``repro.core.fused``) — bit-identical per bank to the loop path but
+    with the per-command host overhead paid once instead of ``banks``
+    times.  ``None`` (default) auto-fuses when parity-safe
+    (:func:`_use_fused`); ``False`` forces the loop reference.
+
+    ``stats``, if a dict, receives the modeled concurrent-bank timing
+    (per-bank time, makespan).
     """
+    banks = _check_banks(banks, batched=batched)
     if not batched:
-        if banks != 1:
-            raise ValueError("banks > 1 requires batched=True")
         sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
                       temp_c=temp_c, error_model="analog")
         isa = PudIsa(sim)
@@ -198,9 +318,29 @@ def mc_boolean_success(op: str, n: int, *, trials: int = 200,
     rng = np.random.default_rng(seed + 1)
     ok = 0
     tot = 0
+    if _use_fused(fused, arr.module, banks, dealer):
+        pairs_by_bank = [_stratified_pairs(arr.isa(b), n, n, groups,
+                                           seed=seed)
+                         for b in range(min(banks, groups))]
+
+        def run_round(fisa, r):
+            nonlocal ok, tot
+            k = fisa.n_banks
+            # draw per group in global round-robin order, stack bank-major
+            ops = np.concatenate([_random_bits(rng, (tg, n, fisa.width))
+                                  for _b in range(k)])
+            pairs = [pairs_by_bank[b][r] for b in range(k)]
+            got = fisa.nary_op(op, ops.swapaxes(0, 1), pair=pairs)
+            ok += int(np.sum(got == _want_nary(op, ops, axis=1)))
+            tot += got.size
+
+        _fused_mc_rounds(arr, groups, run_round)
+        _fill_stats(stats, arr, groups, tg)
+        return ok / tot
     for isa, pair in _bank_pair_schedule(
             arr, groups, lambda isa: _stratified_pairs(isa, n, n, groups,
-                                                       seed=seed)):
+                                                       seed=seed),
+            dealer=dealer):
         isa.sim.recycle_rows()      # bound the hot working set to one op
         # trial-major draw: operand staging reads it contiguously
         ops = _random_bits(rng, (tg, n, isa.width))
@@ -215,10 +355,12 @@ def mc_not_success(n_dst: int = 1, *, trials: int = 200, row_bits: int = 2048,
                    seed: int = 0, module: str | None = None,
                    batched: bool = True, banks: int = 1,
                    groups: int = MC_PAIR_GROUPS,
+                   fused: bool | None = None,
+                   dealer: str = "round_robin",
                    stats: dict | None = None) -> float:
+    """NOT-protocol MC success; knobs as :func:`mc_boolean_success`."""
+    banks = _check_banks(banks, batched=batched)
     if not batched:
-        if banks != 1:
-            raise ValueError("banks > 1 requires batched=True")
         sim = BankSim(module or get_module(), row_bits=row_bits, seed=seed,
                       error_model="analog")
         isa = PudIsa(sim)
@@ -238,10 +380,30 @@ def mc_not_success(n_dst: int = 1, *, trials: int = 200, row_bits: int = 2048,
     rng = np.random.default_rng(seed + 1)
     ok = 0
     tot = 0
+    if _use_fused(fused, arr.module, banks, dealer):
+        pairs_by_bank = [
+            _stratified_pairs(arr.isa(b), arr.isa(b).not_activation(n_dst),
+                              n_dst, groups, seed=seed)
+            for b in range(min(banks, groups))]
+
+        def run_round(fisa, r):
+            nonlocal ok, tot
+            k = fisa.n_banks
+            bits = np.concatenate([_random_bits(rng, (tg, fisa.width))
+                                   for _b in range(k)])
+            pairs = [pairs_by_bank[b][r] for b in range(k)]
+            got = fisa.op_not(bits, n_dst=n_dst, pair=pairs)
+            ok += int(np.sum(got == 1 - bits))
+            tot += got.size
+
+        _fused_mc_rounds(arr, groups, run_round)
+        _fill_stats(stats, arr, groups, tg)
+        return ok / tot
     for isa, pair in _bank_pair_schedule(
             arr, groups,
             lambda isa: _stratified_pairs(isa, isa.not_activation(n_dst),
-                                          n_dst, groups, seed=seed)):
+                                          n_dst, groups, seed=seed),
+            dealer=dealer):
         isa.sim.recycle_rows()      # bound the hot working set to one op
         bits = _random_bits(rng, (tg, isa.width))
         got = isa.op_not(bits, n_dst=n_dst, pair=pair)
@@ -366,6 +528,8 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
                        batched: bool = True,
                        resident: ResidentPolicy | bool | str | None = None,
                        banks: int = 1, groups: int = MC_PAIR_GROUPS,
+                       fused: bool | None = None,
+                       dealer: str = "round_robin",
                        stats: dict | None = None) -> float:
     """Bit-averaged MC success of a whole compiled program on the noisy
     simulator: every output bit of every trial is compared against
@@ -393,13 +557,19 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
     activation-pair walk keeps sweeping; ``GREEDY`` keeps the PR-3
     reference stream.
 
-    ``banks`` shards the trial groups round-robin across a
-    :class:`~repro.core.bankarray.BankArray` — group g executes on bank
-    ``g % banks`` (its own chip identity and noise streams); under the
-    scheduled policy the search runs once on bank 0 and sibling banks
-    replay the frozen decisions (``compiler.shared_schedule_decisions``).
-    ``banks=1`` is bit-for-bit the single-``BankSim`` estimate.
-    ``stats``, if a dict, receives the modeled concurrent-bank timing.
+    ``banks`` shards the trial groups across a
+    :class:`~repro.core.bankarray.BankArray` — group g executes on the
+    bank :func:`_deal_groups` assigns it (round-robin ``g % banks`` by
+    default; ``dealer="occupancy"`` deals to the least-loaded bank), with
+    its own chip identity and noise streams; under the scheduled policy
+    the search runs once on bank 0 and sibling banks replay the frozen
+    decisions (``compiler.shared_schedule_decisions``).  ``banks=1`` is
+    bit-for-bit the single-``BankSim`` estimate.  ``fused`` (tri-state,
+    as in :func:`mc_boolean_success`) runs each round of ``banks``
+    host-staged groups as one bank-stacked episode — host-path only:
+    resident row plans are per-bank seed-dependent, so resident policies
+    always take the loop.  ``stats``, if a dict, receives the modeled
+    concurrent-bank timing.
     """
     prog = get_program(program) if isinstance(program, str) else program
     pol = coerce_resident(resident, where="charz.mc_program_success")
@@ -409,8 +579,7 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
     tot = 0
     if pol.is_resident and not batched:
         raise ValueError("resident execution requires batched=True")
-    if banks != 1 and not batched:
-        raise ValueError("banks > 1 requires batched=True")
+    banks = _check_banks(banks, batched=batched)
     if batched:
         groups = max(1, min(groups, trials))
         tg = max(1, -(-trials // groups))
@@ -418,9 +587,30 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
                         row_bits=row_bits, seed=seed, temp_c=temp_c,
                         error_model="analog", trials=tg,
                         track_unshared=False)
+        if _use_fused(fused, arr.module, banks, dealer,
+                      resident=pol.is_resident):
+
+            def run_round(fisa, r):
+                nonlocal ok, tot
+                k = fisa.n_banks
+                ins = {}
+                draws = [{m: _random_bits(rng, (tg, fisa.width))
+                          for m in names} for _b in range(k)]
+                for m in names:
+                    ins[m] = np.concatenate([d[m] for d in draws])
+                got = CC.run_sim(prog, ins, fisa, trials=k * tg,
+                                 resident=pol)
+                want = CC.run_ideal(prog, ins, width=fisa.width)
+                ok += sum(int(np.sum(got[o] == want[o]))
+                          for o in prog.outputs)
+                tot += sum(got[o].size for o in prog.outputs)
+
+            _fused_mc_rounds(arr, groups, run_round)
+            _fill_stats(stats, arr, groups, tg)
+            return ok / tot
         decisions = None
-        for g in range(groups):
-            isa = arr.isa(g % banks)
+        for bank_g in _deal_groups(arr, groups, dealer):
+            isa = arr.isa(bank_g)
             plan = None
             if pol.is_resident:
                 isa.sim.recycle_rows()  # resident runs re-stage all state

@@ -112,6 +112,11 @@ class EngineConfig:
     ``banks`` > 1 shards dram-backend work round-robin across a
     :class:`~repro.core.bankarray.BankArray` of independent per-bank
     chips (ignored by the jnp/pallas backends, which have no banks).
+    ``fused`` controls the multi-bank fused execution path (dram
+    backend): ``None`` (auto, the default) runs each round of same-size
+    chunk blocks as one bank-stacked episode whenever that is
+    loop-parity-safe, ``False`` forces the per-bank loop (the bit-exact
+    reference), ``True`` forces fusion and raises when it cannot apply.
     """
 
     backend: str = "jnp"
@@ -121,10 +126,15 @@ class EngineConfig:
     resident: ResidentPolicy | None = None
     chain_blocks: bool = True
     banks: int = 1
+    fused: bool | None = None
 
     def __post_init__(self):
         if self.banks < 1:
             raise ValueError(f"banks must be >= 1, got {self.banks}")
+        if self.fused is not None and not isinstance(self.fused, bool):
+            raise TypeError(
+                f"EngineConfig.fused wants True/False/None, "
+                f"got {self.fused!r}")
         if self.resident is not None \
                 and not isinstance(self.resident, ResidentPolicy):
             # EngineConfig is the *new* API: it only holds enum members.

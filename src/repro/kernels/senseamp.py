@@ -105,18 +105,22 @@ def senseamp_resolve_trials(com_cells: jax.Array, ref_cells: jax.Array,
 
     com_cells: (T, N_com, W) f32 — per-trial compute-side cell voltages
     ref_cells: (T, N_ref, W) f32 — per-trial reference-side voltages
-    static:    (W,) f32           — per-SA offsets, shared across trials
+    static:    (W,) f32           — per-SA offsets, shared across trials —
+               or (T, W) f32 for a per-trial static plane (the fused bank
+               axis stacks banks onto T, and each bank has its own chip's
+               offsets and margin shift folded into this plane)
     normals:   (T, W) f32         — per-trial standard normal draws
     uniforms:  (2, T, W) f32      — per-trial floor flip + coin draws
     -> (T, W) uint8.  Every (trial, column) pair is an independent sense
-    amp, so trials flatten losslessly into the kernel's lane axis (one
-    pallas_call for the whole Monte-Carlo batch).
+    amp, so trials (and fused banks x trials) flatten losslessly into the
+    kernel's lane axis (one pallas_call for the whole Monte-Carlo batch).
     """
     t, n_com, w = com_cells.shape
     com2 = jnp.moveaxis(com_cells, 1, 0).reshape(n_com, t * w)
     ref2 = jnp.moveaxis(ref_cells, 1, 0).reshape(ref_cells.shape[1], t * w)
+    st2 = static.reshape(t * w) if static.ndim == 2 else jnp.tile(static, t)
     out = senseamp_resolve(
-        com2, ref2, jnp.tile(static, t), normals.reshape(t * w),
+        com2, ref2, st2, normals.reshape(t * w),
         uniforms.reshape(2, t * w), u_com=u_com, u_ref=u_ref, shift=shift,
         pf=pf, trial_sigma=trial_sigma, interpret=interpret)
     return out.reshape(t, w)

@@ -65,6 +65,21 @@ sub-ledgers (``report.bank(b)``) next to the array totals.  Under the
 scheduled policy the ~0.5 s planner search runs once on bank 0 and
 sibling banks replay the frozen decisions.  ``banks=1`` is bit-for-bit
 the single-bank engine.
+
+**Fused multi-bank rounds** (``fused``, dram backend): instead of
+looping bank-by-bank, each round of ``banks`` same-size chunk blocks is
+stacked onto the trial axis of one
+:class:`~repro.core.fused.FusedPudIsa` episode — a single
+``(banks * block, w)`` array pass whose per-bank slices are
+bit-identical to the loop path's per-bank results *and* command logs
+(per-bank chip identity and noise streams ride along as batched
+parameters; see ``repro.core.fused``).  ``fused=None`` (default)
+auto-enables this whenever it is loop-parity-safe (>1 bank,
+simultaneous-activation module); ``False`` keeps the bit-exact per-bank
+loop as the reference; ``True`` forces it (raising when it cannot
+apply).  Compiled programs fuse under the host-staged policy only —
+resident row plans are seed-dependent per bank — and single-chunk /
+ragged final blocks always stay on the loop.
 """
 from __future__ import annotations
 
@@ -77,7 +92,8 @@ import numpy as np
 
 from ..core import compiler as CC
 from ..core.bankarray import BankArray
-from ..core.device import ENERGY_PJ, get_module
+from ..core.device import ENERGY_PJ, ActivationSupport, get_module
+from ..core.fused import FusedGeometryError
 from ..core.isa import CostModel, OpCost, PudIsa
 from ..core.policy import EngineConfig, ResidentPolicy, coerce_resident
 from ..core.simulator import BankSim
@@ -202,7 +218,8 @@ class PudEngine:
                  module: str | None = None,
                  noisy: bool = False, seed: int = 0,
                  resident: "ResidentPolicy | bool | str | None" = None,
-                 chain_blocks: bool = True, banks: int = 1):
+                 chain_blocks: bool = True, banks: int = 1,
+                 fused: bool | None = None):
         if isinstance(backend, EngineConfig):
             if config is not None:
                 raise ValueError("pass the EngineConfig positionally or "
@@ -216,6 +233,7 @@ class PudEngine:
             resident = config.resident
             chain_blocks = config.chain_blocks
             banks = config.banks
+            fused = config.fused
         assert backend in BACKENDS, backend
         self.backend = backend
         self.module = get_module(module) if module else get_module()
@@ -246,7 +264,7 @@ class PudEngine:
         self.config = EngineConfig(
             backend=backend, module=module if isinstance(module, str)
             else None, noisy=noisy, seed=seed, resident=self.policy,
-            chain_blocks=chain_blocks, banks=banks)
+            chain_blocks=chain_blocks, banks=banks, fused=fused)
         #: resident mode: chain residency across chunk *blocks* — the
         #: in-bank constant rows block k leaves behind feed block k+1 via
         #: RowClone instead of fresh host writes (``False`` restores the
@@ -255,6 +273,12 @@ class PudEngine:
         #: dram backend: number of independent banks chunk blocks are
         #: dealt across (round-robin); other backends have no banks
         self.banks = banks
+        #: dram backend: fused execution tri-state — ``None`` (auto)
+        #: stacks each round of ``banks`` same-size chunk blocks into one
+        #: bank-fused episode when that is loop-parity-safe; ``False``
+        #: keeps the per-bank loop (the bit-exact reference); ``True``
+        #: forces fusion (``FusedGeometryError`` when it cannot apply)
+        self.fused = fused
         self._isa: PudIsa | None = None
         self._array: BankArray | None = None
         if backend == "dram":
@@ -265,9 +289,29 @@ class PudEngine:
                 self.module, banks=banks, seed=seed,
                 error_model="analog" if noisy else "ideal")
             self._isa = self._array.isa(0)
+            reasons = []
+            if banks <= 1:
+                reasons.append("banks=1 has nothing to fuse")
+            if self.module.activation is not ActivationSupport.SIMULTANEOUS:
+                reasons.append(
+                    f"{self.module.name} activates sequentially (per-bank "
+                    "decoder-miss retries diverge)")
+            if fused is None:
+                self._fuse_ok = not reasons
+            elif fused and reasons:
+                raise FusedGeometryError(
+                    "fused=True but fusion cannot apply: "
+                    + "; ".join(reasons))
+            else:
+                self._fuse_ok = bool(fused)
         elif banks != 1:
             raise ValueError(
                 f"banks={banks}: only the dram backend has banks")
+        else:
+            if fused:
+                raise ValueError(
+                    "fused=True: only the dram backend has banks to fuse")
+            self._fuse_ok = False
 
     def _isa_for(self, n_chunks: int, *, recycle: bool = True,
                  bank: int = 0) -> PudIsa:
@@ -290,6 +334,34 @@ class PudEngine:
         if recycle:
             isa.sim.recycle_rows()
         return isa
+
+    def _fused_isa_for(self, k: int, t: int, full_isa):
+        """Fused ISA for one round of ``k`` same-size chunk blocks (one
+        per bank, banks 0..k-1): reseeded with exactly the per-bank noise
+        seeds the loop path's ``_isa_for`` calls would spawn for those
+        blocks, rows recycled like every loop block does.  A bank-subset
+        tail round (``k < banks``) first adopts the full-width ISA's
+        per-bank pair cursors so each bank's pair walk stays continuous
+        (the caller absorbs them back afterwards)."""
+        seeds = [self._array.next_noise_seed(b) for b in range(k)]
+        fisa = self._array.fused_isa(n_banks=k, trials=t)
+        if full_isa is not None and fisa is not full_isa:
+            fisa.adopt_state(full_isa)
+        fisa.sim.reseed_noise(seeds)
+        fisa.sim.recycle_rows()
+        return fisa
+
+    def _fuse_plan(self, n_chunks: int, blk_sz: int) -> int:
+        """Number of *full-size* chunk blocks the fused path may stack
+        for this dispatch (0 = run the per-bank loop for everything).
+        Single-chunk blocks keep the loop (they run on the banks' scalar
+        sims), as does a single full block (nothing to stack); a ragged
+        final block always stays on the loop — both engines run it
+        through the identical ``_isa_for`` call."""
+        if not self._fuse_ok or blk_sz <= 1:
+            return 0
+        full = n_chunks // blk_sz
+        return full if full > 1 else 0
 
     # ------------- accounting -------------
     def _meter(self, op: str, n_inputs: int, n_bits: int, *,
@@ -517,7 +589,12 @@ class PudEngine:
         array — block j on bank ``j % banks`` — each bank chaining its
         own sessions; under the scheduled policy bank 0's session runs
         the planner search and sibling banks replay its frozen decisions
-        (plans are seed-dependent, decisions are not)."""
+        (plans are seed-dependent, decisions are not).
+
+        With fusion enabled and the host-staged policy, each round of
+        ``banks`` same-size blocks instead runs the whole program as one
+        bank-stacked ``run_sim`` episode (``FusedPudIsa``) — per-bank
+        results and command logs stay bit-identical to the loop path."""
         r, c = shape
         n_bits = r * c * 32
         w = self._isa.width
@@ -535,6 +612,32 @@ class PudEngine:
         chain = self.policy.is_resident and self.chain_blocks
         sessions: dict[tuple[int, int], CC.ResidentSession] = {}
         shared = None       # bank-0 adjudicated decisions, non-chained
+        # same-program chunk blocks fuse across banks only under the
+        # host-staged policy: resident row plans are seed-dependent per
+        # bank, so fused resident execution could not be loop-exact
+        full = (self._fuse_plan(n_chunks, blk_sz)
+                if self.policy is ResidentPolicy.HOST else 0)
+        full_isa = None
+        for j0 in range(0, full, self.banks):        # fused rounds
+            k = min(self.banks, full - j0)
+            fisa = self._fused_isa_for(k, blk_sz, full_isa)
+            lo = j0 * blk_sz
+            kt = k * blk_sz
+            ins = {name: (ch[0] if const[name] else ch[lo:lo + kt])
+                   for name, ch in chunks.items()}
+            before = self._log_snapshot(fisa.sim)
+            res = CC.run_sim(prog, ins, fisa, resident=self.policy)
+            for b in range(k):
+                self._account_sim_log(fisa.sim, before, bank=b)
+            for name in pieces:
+                v = np.asarray(res[name])
+                if v.ndim == 1:     # broadcast input passed through
+                    v = np.broadcast_to(v, (kt, w))
+                pieces[name].extend(fisa.split_banks(v))
+            if k == self.banks:
+                full_isa = fisa
+            elif full_isa is not None:
+                full_isa.absorb_state(fisa)
 
         def bank0_fixed():
             """Frozen scheduler decisions for sibling-bank replay: taken
@@ -546,7 +649,8 @@ class PudEngine:
             return CC.shared_schedule_decisions(prog, self._array.isa(0),
                                                 pin_inputs=chain)
 
-        for j, lo in enumerate(range(0, n_chunks, blk_sz)):
+        for j, lo in enumerate(range(full * blk_sz, n_chunks, blk_sz),
+                               start=full):          # loop leftovers
             t = min(blk_sz, n_chunks - lo)
             bank = j % self.banks
             ins = {}
@@ -619,9 +723,26 @@ class PudEngine:
             n, r * c * 32)
         w = self._isa.width
         chunks = self._to_chunks(bits, w)            # (n, C, w)
-        blk_sz = self._block_size(chunks.shape[1])
+        n_chunks = chunks.shape[1]
+        blk_sz = self._block_size(n_chunks)
         pieces = []
-        for j, lo in enumerate(range(0, chunks.shape[1], blk_sz)):
+        full = self._fuse_plan(n_chunks, blk_sz)
+        full_isa = None
+        for j0 in range(0, full, self.banks):        # fused rounds
+            k = min(self.banks, full - j0)
+            fisa = self._fused_isa_for(k, blk_sz, full_isa)
+            lo = j0 * blk_sz
+            before = self._log_snapshot(fisa.sim)
+            res = fisa.nary_op(op, chunks[:, lo:lo + k * blk_sz])
+            for b in range(k):
+                self._account_sim_log(fisa.sim, before, bank=b)
+            pieces.extend(fisa.split_banks(res))
+            if k == self.banks:
+                full_isa = fisa
+            elif full_isa is not None:
+                full_isa.absorb_state(fisa)
+        for j, lo in enumerate(range(full * blk_sz, n_chunks, blk_sz),
+                               start=full):          # loop leftovers
             blk = chunks[:, lo:lo + blk_sz]          # (n, C', w)
             bank = j % self.banks
             isa = self._isa_for(blk.shape[1], bank=bank)
@@ -642,9 +763,26 @@ class PudEngine:
             r * c * 32)
         w = self._isa.width
         chunks = self._to_chunks(bits, w)            # (C, w)
-        blk_sz = self._block_size(chunks.shape[0])
+        n_chunks = chunks.shape[0]
+        blk_sz = self._block_size(n_chunks)
         pieces = []
-        for j, lo in enumerate(range(0, chunks.shape[0], blk_sz)):
+        full = self._fuse_plan(n_chunks, blk_sz)
+        full_isa = None
+        for j0 in range(0, full, self.banks):        # fused rounds
+            k = min(self.banks, full - j0)
+            fisa = self._fused_isa_for(k, blk_sz, full_isa)
+            lo = j0 * blk_sz
+            before = self._log_snapshot(fisa.sim)
+            res = fisa.op_not(chunks[lo:lo + k * blk_sz])
+            for b in range(k):
+                self._account_sim_log(fisa.sim, before, bank=b)
+            pieces.extend(fisa.split_banks(res))
+            if k == self.banks:
+                full_isa = fisa
+            elif full_isa is not None:
+                full_isa.absorb_state(fisa)
+        for j, lo in enumerate(range(full * blk_sz, n_chunks, blk_sz),
+                               start=full):          # loop leftovers
             blk = chunks[lo:lo + blk_sz]
             bank = j % self.banks
             isa = self._isa_for(blk.shape[0], bank=bank)
