@@ -78,6 +78,11 @@ def _counter_keys(snap: dict) -> dict[str, float]:
                  "occupancy_regression_ns"):
         if kind in fu:
             out[f"fused.{kind}"] = float(fu[kind])
+    sa = snap.get("static_detail", {})
+    for kind in ("verify_findings", "timing_violations_loop",
+                 "timing_violations_fused"):
+        if kind in sa:
+            out[f"static.{kind}"] = float(sa[kind])
     return out
 
 

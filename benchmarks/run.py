@@ -24,13 +24,17 @@ Prints CSV sections:
     occupancy-aware group dealer's makespan on uneven loads,
   * in-DRAM vs CPU cost model (the paper's motivation, Table-style),
   * kernel micro-benchmarks (packed-op throughput on this host),
-  * PuD-engine offload accounting on LM workloads.
+  * PuD-engine offload accounting on LM workloads,
+  * static analysis: plan-verifier (symbolic replay) overhead over the
+    program zoo and DDR4 timing lint of the engine command logs
+    (violations gated to 0; by-design PuD gaps and the independent-bank
+    makespan's tRRD/tFAW optimism quantified).
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]
                                              [--only SECTION]...
 
 ``--json`` additionally writes machine-readable timings + success-rate
-deltas (default path BENCH_pr7.json) so CI can archive the trajectory;
+deltas (default path BENCH_pr8.json) so CI can archive the trajectory;
 ``benchmarks.diff_bench`` compares snapshots across PRs/nightlies.
 ``--only`` (repeatable) runs just the named sections — see
 ``_sections`` for the keys (e.g. ``--only fused --only bankarray``).
@@ -903,13 +907,97 @@ def pud_offload_lm():
          "metric,value")
 
 
+def static_analysis(fast=False):
+    """Static analysis: plan-verifier overhead + DDR4 timing lint.
+
+    * **verifier overhead** — wall time of the symbolic plan replay
+      (``analysis.verify_plan``) per zoo program/policy, next to the
+      planning time it rides on; findings must be 0 everywhere (the
+      ``static.verify_findings`` counter is gated exactly),
+    * **timing lint** — the loop-path and fused-path engine command
+      logs expand to primitive ACT/PRE timelines and lint against the
+      JEDEC rule set; per-bank ``violations`` must be 0 (exact gate)
+      while the deliberate PuD gaps land in ``by_design``, and the
+      rank-level tRRD/tFAW merge quantifies the independent-bank
+      makespan's optimism (``min_legal_makespan_ns`` lower bound).
+    """
+    import jax.numpy as jnp
+
+    from repro import analysis
+    from repro.core import charz
+    from repro.core import compiler as CC
+    from repro.core.isa import PudIsa
+    from repro.core.policy import ResidentPolicy
+    from repro.core.simulator import BankSim
+    from repro.pud.engine import PudEngine
+
+    detail: dict = {}
+    rows = []
+    n_findings = 0
+    verify_ms = plan_ms = 0.0
+    for name in charz.PROGRAMS:
+        prog = charz.get_program(name)
+        for pol in ("greedy", "scheduled"):
+            isa = PudIsa(BankSim(row_bits=128, error_model="ideal",
+                                 seed=11))
+            t0 = time.time()
+            plan = CC.schedule_resident(prog, isa, policy=pol,
+                                        verify=False)
+            t1 = time.time()
+            findings = analysis.verify_plan(prog, plan)
+            t2 = time.time()
+            n_findings += len(findings)
+            verify_ms += (t2 - t1) * 1e3
+            plan_ms += (t1 - t0) * 1e3
+            rows.append((name, pol, len(plan.steps), len(findings),
+                         round((t1 - t0) * 1e3, 2),
+                         round((t2 - t1) * 1e3, 2)))
+    _csv("Plan verifier (symbolic replay) over the program zoo", rows,
+         "program,policy,steps,findings,plan_ms,verify_ms")
+    detail["verify_findings"] = n_findings
+    detail["verify_ms_total"] = round(verify_ms, 2)
+    detail["verify_overhead_pct"] = round(
+        100.0 * verify_ms / plan_ms, 2) if plan_ms else 0.0
+
+    rows = []
+    rng = np.random.default_rng(7)
+    prog = charz.get_program("xor")
+    for fused in (False, True):
+        eng = PudEngine("dram", banks=2, fused=fused,
+                        resident=(ResidentPolicy.HOST if fused
+                                  else ResidentPolicy.SCHEDULED),
+                        verify=False)
+        ins = {k: jnp.asarray(np.asarray(rng.integers(
+            0, 2**32, (4, 4), dtype=np.uint32))) for k in ("a", "b")}
+        eng.run_program(prog, ins)
+        rep = analysis.lint_bank_array(eng._array)
+        label = "fused" if fused else "loop"
+        by_design = sum(sum(r.by_design.values()) for r in rep.per_bank)
+        deficit_ns = sum(r.deficit_ns for r in rep.per_bank)
+        rows.append((label, rep.violations, by_design,
+                     round(deficit_ns, 1), rep.trrd_conflicts,
+                     rep.tfaw_conflicts, round(rep.makespan_ns, 1),
+                     round(rep.min_legal_makespan_ns, 1),
+                     round(rep.optimism_pct, 2)))
+        detail[f"timing_violations_{label}"] = rep.violations
+        detail[f"timing_by_design_{label}"] = by_design
+        detail[f"makespan_ns_{label}"] = round(rep.makespan_ns, 1)
+        detail[f"min_legal_makespan_ns_{label}"] = round(
+            rep.min_legal_makespan_ns, 1)
+    _csv("DDR4 timing lint of engine command logs (2-bank loop vs fused)",
+         rows, "path,violations,by_design,deficit_ns,trrd_conflicts,"
+               "tfaw_conflicts,makespan_ns,min_legal_makespan_ns,"
+               "optimism_pct")
+    RESULTS["static_detail"] = detail
+
+
 def _json_path(argv) -> str | None:
     if "--json" not in argv:
         return None
     i = argv.index("--json")
     if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
         return argv[i + 1]
-    return "BENCH_pr7.json"
+    return "BENCH_pr8.json"
 
 
 def _sections(fast: bool, mc: bool):
@@ -935,6 +1023,7 @@ def _sections(fast: bool, mc: bool):
         ("reliability", reliability_planning),
         ("kernels", lambda: kernel_microbench(fast=fast)),
         ("pud_offload", pud_offload_lm),
+        ("static", lambda: static_analysis(fast=fast)),
     ]
 
 

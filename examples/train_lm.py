@@ -10,7 +10,7 @@ import sys
 
 sys.argv = [sys.argv[0]]  # defer to repro.launch.train's own CLI below
 
-from repro.launch import train as TR  # noqa: E402
+from repro.launch import train as TR
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()

@@ -140,7 +140,7 @@ class CheckpointManager:
         shard_leaves = (jax.tree.leaves(shardings)
                         if shardings is not None else [None] * len(leaves))
         out = []
-        for (path, tmpl), shd in zip(leaves, shard_leaves):
+        for (path, tmpl), shd in zip(leaves, shard_leaves, strict=True):
             name = _leaf_name(path)
             meta = manifest["leaves"].get(name)
             if meta is None:

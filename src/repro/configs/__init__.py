@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import importlib
 
-from ..models.config import ModelConfig, SHAPES, ShapeConfig  # noqa: F401
+from ..models.config import ModelConfig, SHAPES, ShapeConfig
 
 ARCHS: tuple[str, ...] = (
     "minitron-8b",

@@ -11,6 +11,6 @@ Layers (bottom-up):
   charz      — characterization harness reproducing the paper's figures
   calibrate  — fits the analog model to every quantified paper claim
 """
-from . import analog, decoder, device  # noqa: F401
-from .analog import AnalogParams, DEFAULT_PARAMS  # noqa: F401
-from .device import MODULE_ZOO, get_module  # noqa: F401
+from . import analog, decoder, device
+from .analog import AnalogParams, DEFAULT_PARAMS
+from .device import MODULE_ZOO, get_module

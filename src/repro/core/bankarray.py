@@ -142,7 +142,7 @@ class BankArray:
         t = self.trials if trials is ... else trials
         key = (bank, t, tuple(sorted(overrides.items())))
         if key not in self._isas:
-            sim = BankSim(self.module, seed=self.bank_seeds[bank],
+            sim = BankSim(self.module, seed=self.bank_seeds[bank], bank=bank,
                           trials=t, **{**self._sim_kwargs, **overrides})
             self._isas[key] = PudIsa(sim, bank=bank)
         return self._isas[key]

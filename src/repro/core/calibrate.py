@@ -168,7 +168,7 @@ def monotonicity_penalty(p: AnalogParams) -> float:
     pen = 0.0
     for op in MONOTONE_OPS:
         vals = [A.boolean_success_avg(op, n, p=p) for n in MONOTONE_NS]
-        for lo, hi in zip(vals, vals[1:]):
+        for lo, hi in zip(vals, vals[1:], strict=False):
             if hi < lo + 1e-4:   # require increase
                 pen += (lo - hi + 1e-3) * 100.0
     return pen
@@ -224,7 +224,7 @@ def bounds_penalty(p: AnalogParams) -> float:
 
 def loss(p: AnalogParams) -> float:
     tot = 0.0
-    for name, (target, w, fn) in CLAIMS.items():
+    for target, w, fn in CLAIMS.values():
         model = float(fn(p))
         tot += w * (model - target) ** 2
     tot += 500.0 * monotonicity_penalty(p) ** 2

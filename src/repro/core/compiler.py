@@ -48,7 +48,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .isa import CostModel, OpCost, PudIsa
-from .policy import ResidentPolicy  # noqa: F401  (canonical resident spelling)
+from .policy import ResidentPolicy  # canonical resident spelling
 
 MAX_FANIN = 16
 
@@ -281,7 +281,7 @@ def run_ideal(prog: Program, inputs: dict[str, np.ndarray],
         if i.op == "input":
             regs[i.dst] = np.asarray(arrs[i.name], dtype=np.uint8)
         elif i.op == "const":
-            regs[i.dst] = np.full(lead + (width,), int(i.value),
+            regs[i.dst] = np.full((*lead, width), int(i.value),
                                   dtype=np.uint8)
         elif i.op == "not":
             regs[i.dst] = 1 - regs[i.srcs[0]]
@@ -1092,6 +1092,7 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
                       carry: dict | None = None,
                       pins: dict | None = None, pin_inputs: bool = False,
                       duplicate: bool | None = None,
+                      verify: bool | None = None,
                       _fixed: tuple | None = None) -> ResidentPlan:
     """Compile-time polarity/residency scheduling pre-pass.
 
@@ -1129,6 +1130,14 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
     ``carry`` seeds the planner's in-bank constant-row cache and
     ``pins``/``pin_inputs`` carry pinned *input-word* rows (cross-block
     residency: see :class:`ResidentSession`).
+
+    ``verify`` statically checks the *final* plan (search attempts are
+    never verified) with :func:`repro.analysis.verify_plan` — a symbolic
+    row-liveness replay plus exact command-log reconciliation — and
+    raises :class:`repro.analysis.PlanVerificationError` on any ERROR
+    finding.  ``None`` (the default) defers to
+    :func:`repro.analysis.default_verify`: on under pytest or
+    ``FCDRAM_VERIFY=1``, off everywhere else.
     ``_fixed=(order, forced, dup_hints, dup_enabled)`` skips the search
     and replans with known, already-adjudicated decisions (two planner
     passes); without it, the search result is memoized per (program
@@ -1157,9 +1166,24 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
         raise ValueError(f"unknown resident policy {policy!r}")
     if duplicate is None:
         duplicate = policy == "scheduled"
+
+    def verified(pl: ResidentPlan) -> ResidentPlan:
+        # static verification of the final plan only (search attempts
+        # are intermediate state); lazy import — analysis sits above the
+        # compiler in the layering
+        from .. import analysis
+        do = analysis.default_verify() if verify is None else verify
+        if do:
+            findings = [f for f in analysis.verify_plan(
+                prog, pl, carry=carry, pins=pins) if f.severity == "error"]
+            if findings:
+                raise analysis.PlanVerificationError(findings)
+        return pl
+
     if policy == "greedy":
-        return _ResidentPlanner(prog, isa, carry=carry, pins=pins,
-                                pin_inputs=pin_inputs).plan("greedy")
+        return verified(_ResidentPlanner(prog, isa, carry=carry, pins=pins,
+                                         pin_inputs=pin_inputs)
+                        .plan("greedy"))
 
     cursor0 = dict(isa._pair_cursor)
 
@@ -1220,7 +1244,7 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
         hints = dict(hints)
         best = belady(attempt(order, forced, dup=use_dup, hints=hints),
                       use_dup, hints)
-        return finalize(best, hints, use_dup)
+        return verified(finalize(best, hints, use_dup))
     else:
         orders = [list(range(len(prog.instrs)))]
         pressure = _pressure_order(prog)
@@ -1290,7 +1314,7 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
             _SCHED_CACHE.pop(next(iter(_SCHED_CACHE)))
         _SCHED_CACHE[cache_key] = (best.order, dict(best.demorgan),
                                    dict(hints), use_dup)
-    return finalize(best, hints, use_dup)
+    return verified(finalize(best, hints, use_dup))
 
 
 def shared_schedule_decisions(prog: Program, isa: PudIsa, *,
@@ -1444,13 +1468,16 @@ class ResidentSession:
 
     def __init__(self, prog: Program, isa: PudIsa, *,
                  policy: str = "greedy", pin_inputs: bool | None = None,
-                 duplicate: bool | None = None, fixed: tuple | None = None):
+                 duplicate: bool | None = None, fixed: tuple | None = None,
+                 verify: bool | None = None):
         self.prog, self.isa = prog, isa
         self.policy = "scheduled" if policy is True else policy
         self.pin_inputs = (self.policy == "scheduled"
                            if pin_inputs is None else pin_inputs)
         #: spill-placement ablation knob (None = the policy default)
         self.duplicate = duplicate
+        #: static plan verification tri-state (None = default_verify())
+        self.verify = verify
         self._carry: dict | None = None
         #: pre-adjudicated scheduler decisions — seeded by BankArray so
         #: sibling banks replay bank 0's search (shared_schedule_decisions)
@@ -1472,7 +1499,7 @@ class ResidentSession:
                                  carry=self._carry, pins=pins or None,
                                  pin_inputs=self.pin_inputs,
                                  duplicate=self.duplicate,
-                                 _fixed=self._fixed)
+                                 verify=self.verify, _fixed=self._fixed)
         out = _ResidentExec(plan, self.prog, inputs, self.isa).run()
         self._carry = plan.carry
         self._pins = {

@@ -49,6 +49,8 @@ class DRAMTimings:
     tWR: float      # write recovery
     tRFC: float     # refresh cycle (8Gb-class)
     tREFI: float    # refresh interval
+    tRRD: float = 4.9   # ACT -> ACT, different rows of one bank group
+    tFAW: float = 21.0  # four-activate window (rolling, per rank)
 
     @property
     def tRC(self) -> float:
@@ -62,10 +64,14 @@ class DRAMTimings:
 # JEDEC-derived nominal grades (DDR4).  The paper tests 2133 / 2400 / 2666 /
 # 3200 MT/s modules; values below are standard -U/-V bin timings.
 TIMINGS: dict[int, DRAMTimings] = {
-    2133: DRAMTimings(2133, 0.937, 14.06, 33.0, 14.06, 14.06, 15.0, 350.0, 7800.0),
-    2400: DRAMTimings(2400, 0.833, 13.32, 32.0, 13.32, 13.32, 15.0, 350.0, 7800.0),
-    2666: DRAMTimings(2666, 0.750, 13.50, 32.0, 13.50, 13.50, 15.0, 350.0, 7800.0),
-    3200: DRAMTimings(3200, 0.625, 13.75, 32.0, 13.75, 13.75, 15.0, 350.0, 7800.0),
+    2133: DRAMTimings(2133, 0.937, 14.06, 33.0, 14.06, 14.06, 15.0, 350.0, 7800.0,
+                      tRRD=5.3, tFAW=21.0),
+    2400: DRAMTimings(2400, 0.833, 13.32, 32.0, 13.32, 13.32, 15.0, 350.0, 7800.0,
+                      tRRD=4.9, tFAW=21.0),
+    2666: DRAMTimings(2666, 0.750, 13.50, 32.0, 13.50, 13.50, 15.0, 350.0, 7800.0,
+                      tRRD=4.9, tFAW=21.0),
+    3200: DRAMTimings(3200, 0.625, 13.75, 32.0, 13.75, 13.75, 15.0, 350.0, 7800.0,
+                      tRRD=4.9, tFAW=21.0),
 }
 
 #: Reduced timings used for multi-row activation (paper: "e.g., tRP < 3ns").

@@ -318,7 +318,8 @@ class FusedBankSim(BankSim):
         arr[:, isrc] = restored
         t = self.timings
         self.log.add("RC", t.tRAS + VIOLATED_TRP_NS + t.tRAS + t.tRP,
-                     2 * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"])
+                     2 * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"],
+                     bank=self.bank, sub=sub)
 
     # ---------------- per-bank analog parameters ----------------
     def _resolve_params(self, stripe: int, op: str, n: int, *,
@@ -431,7 +432,8 @@ class FusedBankSim(BankSim):
         t_first = t.tRAS if first_act_restored else VIOLATED_TRAS_NS
         self.log.add("APA", t_first + VIOLATED_TRP_NS + t.tRAS + t.tRP,
                      (a0.n_rf + a0.n_rl) * ENERGY_PJ["act"]
-                     + 2 * ENERGY_PJ["pre"])
+                     + 2 * ENERGY_PJ["pre"],
+                     bank=self.bank, sub=f_sub)
         fact = FusedActivation(
             a0.n_rf, a0.n_rl, a0.kind,
             np.asarray([a.rows_f for a in acts], dtype=np.int64),

@@ -68,7 +68,8 @@ class PairInventory:
         idx = np.searchsorted(cum, u)
         for i, cat in enumerate(cats):
             fs, ls = np.nonzero(idx == i)
-            pairs.setdefault(cat, []).extend(zip(fs.tolist(), ls.tolist()))
+            pairs.setdefault(cat, []).extend(
+                zip(fs.tolist(), ls.tolist(), strict=True))
         self._pairs = {k: np.asarray(v, dtype=np.int64)
                        for k, v in pairs.items()}
 
@@ -331,7 +332,7 @@ class PudIsa:
         the packed row keeps any leading trial axis."""
         cols = self._f_cols if side == "f" else self._l_cols
         bits = np.asarray(bits, dtype=np.float32)
-        row = np.zeros(bits.shape[:-1] + (self.sim.geom.row_bits,),
+        row = np.zeros((*bits.shape[:-1], self.sim.geom.row_bits),
                        dtype=np.float32)
         row[..., cols] = bits
         return row

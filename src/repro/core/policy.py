@@ -117,6 +117,12 @@ class EngineConfig:
     chunk blocks as one bank-stacked episode whenever that is
     loop-parity-safe, ``False`` forces the per-bank loop (the bit-exact
     reference), ``True`` forces fusion and raises when it cannot apply.
+    ``verify`` is the static plan-verification tri-state: ``True``
+    verifies every resident plan the engine schedules
+    (:func:`repro.analysis.verify_plan`), ``False`` never does, and
+    ``None`` (the default) defers to
+    :func:`repro.analysis.default_verify` — on under pytest/debug, off
+    in benchmarks — resolved by :meth:`resolved_verify`.
     """
 
     backend: str = "jnp"
@@ -127,6 +133,7 @@ class EngineConfig:
     chain_blocks: bool = True
     banks: int = 1
     fused: bool | None = None
+    verify: bool | None = None
 
     def __post_init__(self):
         if self.banks < 1:
@@ -135,6 +142,10 @@ class EngineConfig:
             raise TypeError(
                 f"EngineConfig.fused wants True/False/None, "
                 f"got {self.fused!r}")
+        if self.verify is not None and not isinstance(self.verify, bool):
+            raise TypeError(
+                f"EngineConfig.verify wants True/False/None, "
+                f"got {self.verify!r}")
         if self.resident is not None \
                 and not isinstance(self.resident, ResidentPolicy):
             # EngineConfig is the *new* API: it only holds enum members.
@@ -148,6 +159,13 @@ class EngineConfig:
             return self.resident
         return (ResidentPolicy.SCHEDULED if self.backend == "dram"
                 else ResidentPolicy.HOST)
+
+    def resolved_verify(self) -> bool:
+        """The effective plan-verification switch (see ``verify``)."""
+        if self.verify is not None:
+            return self.verify
+        from .. import analysis
+        return analysis.default_verify()
 
     def with_(self, **changes) -> "EngineConfig":
         """A copy with the given fields replaced (frozen-friendly)."""

@@ -130,24 +130,52 @@ def _norm_ppf(q):
     return out
 
 
+@dataclass(frozen=True)
+class LogEvent:
+    """One logical command as recorded by :class:`CommandLog`.
+
+    ``seq`` is a per-log monotonic issue index (command order survives the
+    count aggregation of ``counts``); ``bank``/``sub`` identify the issuing
+    bank and subarray (``sub = -1`` when the command has no single home
+    subarray).  ``count`` repeats the command back-to-back — e.g. one WR
+    event with ``count=3`` stages three rows."""
+
+    seq: int
+    cmd: str
+    t_ns: float
+    e_pj: float
+    count: int
+    bank: int
+    sub: int
+
+
 @dataclass
 class CommandLog:
-    """Per-command time/energy accounting (feeds the ISA cost model)."""
+    """Per-command time/energy accounting (feeds the ISA cost model).
+
+    Besides the aggregate time/energy/counts used by the cost model, the
+    log keeps an ordered :class:`LogEvent` stream (issuing bank/subarray +
+    monotonic sequence index) that the static timing linter
+    (``repro.analysis.timing``) replays against DDR4 timing rules."""
 
     time_ns: float = 0.0
     energy_pj: float = 0.0
     counts: dict = field(default_factory=dict)
+    events: list = field(default_factory=list)
 
     def add(self, cmd: str, t_ns: float, e_pj: float,
-            count: int = 1) -> None:
+            count: int = 1, *, bank: int = 0, sub: int = -1) -> None:
         self.time_ns += t_ns * count
         self.energy_pj += e_pj * count
         self.counts[cmd] = self.counts.get(cmd, 0) + count
+        self.events.append(LogEvent(len(self.events), cmd, t_ns, e_pj,
+                                    count, bank, sub))
 
     def reset(self) -> None:
         self.time_ns = 0.0
         self.energy_pj = 0.0
         self.counts.clear()
+        self.events.clear()
 
 
 class BankSim:
@@ -159,7 +187,8 @@ class BankSim:
                  error_model: str = "analog", trials: int | None = None,
                  track_unshared: bool = True, noise_seed: int | None = None,
                  resolve_backend: str = "auto",
-                 rowclone_fail_p: float = ROWCLONE_FAIL_P):
+                 rowclone_fail_p: float = ROWCLONE_FAIL_P,
+                 bank: int = 0):
         self.module = (get_module(module) if isinstance(module, str)
                        else module or get_module())
         geom = self.module.geometry
@@ -173,6 +202,9 @@ class BankSim:
         assert error_model in ("analog", "mean", "ideal", "none")
         self.error_model = error_model
         self.seed = seed
+        #: bank index stamped on every CommandLog event (array position;
+        #: purely log metadata — the sim itself is always one bank)
+        self.bank = int(bank)
         #: independent per-trial noise stream (chip identity stays ``seed``)
         self.noise_seed = seed if noise_seed is None else int(noise_seed)
         if resolve_backend not in ("auto", "numpy", "pallas"):
@@ -363,14 +395,16 @@ class BankSim:
         n_bursts = self.geom.row_bits // 512  # 64B bursts per chip-row
         self.log.add("WR", t.tRCD + t.tWR + t.tRP,
                      ENERGY_PJ["act"] + ENERGY_PJ["pre"]
-                     + n_bursts * ENERGY_PJ["wr_per_64B"])
+                     + n_bursts * ENERGY_PJ["wr_per_64B"],
+                     bank=self.bank, sub=sub)
 
-    def _log_wr(self, n_rows: int = 1) -> None:
+    def _log_wr(self, n_rows: int = 1, sub: int = -1) -> None:
         t = self.timings
         n_bursts = self.geom.row_bits // 512
         self.log.add("WR", t.tRCD + t.tWR + t.tRP,
                      ENERGY_PJ["act"] + ENERGY_PJ["pre"]
-                     + n_bursts * ENERGY_PJ["wr_per_64B"], count=n_rows)
+                     + n_bursts * ENERGY_PJ["wr_per_64B"], count=n_rows,
+                     bank=self.bank, sub=sub)
 
     def write_cols_multi(self, sub: int, rows, cols,
                          bits: np.ndarray) -> None:
@@ -384,19 +418,19 @@ class BankSim:
         if self.track_unshared:
             arr[:, idx] = 0.0
         arr[:, idx, cols] = np.asarray(bits, dtype=np.float32)
-        self._log_wr(len(idx))
+        self._log_wr(len(idx), sub=sub)
 
     def fill_rows(self, sub: int, rows, value: float,
-                  cols=slice(None)) -> None:
+                  cols=None) -> None:
         """WR of constant rows (reference-block staging).  With
         ``track_unshared=False`` callers may restrict to the observed
-        columns."""
+        columns (``cols=None`` fills the whole row)."""
         idx = self._map_rows(sub, rows)
-        if not self.track_unshared and cols != slice(None):
+        if not self.track_unshared and cols is not None:
             self._cells(sub)[:, idx, cols] = value
         else:
             self._cells(sub)[:, idx] = value
-        self._log_wr(len(idx))
+        self._log_wr(len(idx), sub=sub)
 
     def read_row(self, sub: int, row: int) -> np.ndarray:
         i = self._row(sub, row)
@@ -405,7 +439,8 @@ class BankSim:
         n_bursts = self.geom.row_bits // 512
         self.log.add("RD", t.tRCD + t.tCL + t.tRP,
                      ENERGY_PJ["act"] + ENERGY_PJ["pre"]
-                     + n_bursts * ENERGY_PJ["rd_per_64B"])
+                     + n_bursts * ENERGY_PJ["rd_per_64B"],
+                     bank=self.bank, sub=sub)
         return self._out((arr[:, i][..., self._invperm] > 0.5)
                          .astype(np.uint8))
 
@@ -418,7 +453,8 @@ class BankSim:
         t = self.timings
         # Frac = ACT -> PRE with violated tRAS, twice (per FracDRAM)
         self.log.add("FRAC", 2 * (VIOLATED_TRAS_NS + t.tRP),
-                     2 * (ENERGY_PJ["act"] + ENERGY_PJ["pre"]))
+                     2 * (ENERGY_PJ["act"] + ENERGY_PJ["pre"]),
+                     bank=self.bank, sub=sub)
 
     def rowclone(self, sub: int, src: int, dst: int) -> None:
         """Same-subarray RowClone (sequential ACT -> PRE -> ACT).
@@ -443,7 +479,8 @@ class BankSim:
         arr[:, isrc] = restored  # source restored
         t = self.timings
         self.log.add("RC", t.tRAS + VIOLATED_TRP_NS + t.tRAS + t.tRP,
-                     2 * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"])
+                     2 * ENERGY_PJ["act"] + 2 * ENERGY_PJ["pre"],
+                     bank=self.bank, sub=sub)
 
     # ---------------- APA: simultaneous multi-row activation ----------------
     def _split_cols(self, f_sub: int, l_sub: int):
@@ -604,7 +641,8 @@ class BankSim:
         t_first = t.tRAS if first_act_restored else VIOLATED_TRAS_NS
         self.log.add("APA", t_first + VIOLATED_TRP_NS + t.tRAS + t.tRP,
                      (act.n_rf + act.n_rl) * ENERGY_PJ["act"]
-                     + 2 * ENERGY_PJ["pre"])
+                     + 2 * ENERGY_PJ["pre"],
+                     bank=self.bank, sub=f_sub)
         if act.n_rf == 0:
             return act
         if self.module.activation is ActivationSupport.SEQUENTIAL \
@@ -695,7 +733,8 @@ class BankSim:
         f_sub, f_row = divmod(rf_global, rps)
         l_sub, l_row = divmod(rl_global, rps)
         act = DEC.activation_pattern(self.module, f_row, l_row, seed=self.seed)
-        self.log.add("APA+WR", 30.0, ENERGY_PJ["act"] * (act.n_rf + act.n_rl))
+        self.log.add("APA+WR", 30.0, ENERGY_PJ["act"] * (act.n_rf + act.n_rl),
+                     bank=self.bank, sub=f_sub)
         if act.n_rf == 0:
             return act
         pattern = np.asarray(pattern, dtype=np.float32)
@@ -741,7 +780,8 @@ class BankSim:
         n_bursts = self.geom.row_bits // 512
         self.log.add("RD", t.tRCD + t.tCL + t.tRP,
                      ENERGY_PJ["act"] + ENERGY_PJ["pre"]
-                     + n_bursts * ENERGY_PJ["rd_per_64B"])
+                     + n_bursts * ENERGY_PJ["rd_per_64B"],
+                     bank=self.bank, sub=sub)
         return self._out((self._cells(sub)[:, i, sl] > 0.5).astype(np.uint8))
 
     def snapshot_rows(self, sub: int, rows) -> np.ndarray:

@@ -1,1 +1,1 @@
-from .pipeline import DataConfig, SyntheticLM  # noqa: F401
+from .pipeline import DataConfig, SyntheticLM

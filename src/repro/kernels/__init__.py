@@ -7,4 +7,4 @@ senseamp      — fused charge-share + sense-amp Monte-Carlo resolver
 ops           — jit'd public wrappers (interpret=True on CPU, Mosaic on TPU)
 ref           — pure-jnp oracles defining the semantics
 """
-from . import ops, ref  # noqa: F401
+from . import ops, ref

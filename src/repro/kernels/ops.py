@@ -16,8 +16,8 @@ from . import bitserial as _bitserial
 from . import bitwise as _bitwise
 from . import popcount_gemm as _pcg
 from . import senseamp as _senseamp
-from . import ref as ref  # noqa: F401  (re-exported for tests/oracles)
-from .ref import pack_bits, unpack_bits  # noqa: F401
+from . import ref as ref  # re-exported for tests/oracles
+from .ref import pack_bits, unpack_bits
 
 
 @functools.lru_cache(maxsize=1)

@@ -225,7 +225,7 @@ def main() -> None:
             try:
                 run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
                          compression=args.compression)
-            except Exception as e:  # noqa: BLE001 — report-and-continue CLI
+            except Exception as e:  # report-and-continue CLI
                 traceback.print_exc()
                 failures.append((arch, shape, mp, repr(e)))
     if failures:

@@ -35,7 +35,7 @@ def main() -> None:
     eng = ServeEngine(cfg, params, n_slots=args.slots, max_len=args.max_len)
     rng = np.random.default_rng(0)
     t0 = time.time()
-    for i in range(args.requests):
+    for _ in range(args.requests):
         plen = int(rng.integers(4, 24))
         prompt = rng.integers(2, cfg.vocab, plen).tolist()
         eng.submit(prompt, max_new_tokens=args.max_new,

@@ -1,3 +1,3 @@
 """Model zoo substrate: config-driven transformers / MoE / SSM / hybrid."""
-from .config import ModelConfig, ShapeConfig, TrainConfig, SHAPES  # noqa: F401
-from . import transformer  # noqa: F401
+from .config import ModelConfig, ShapeConfig, TrainConfig, SHAPES
+from . import transformer

@@ -1,2 +1,2 @@
 """Framework-side PuD engine: backend dispatch, masks, Bloom dedup."""
-from .engine import PudEngine, OffloadReport  # noqa: F401
+from .engine import PudEngine, OffloadReport

@@ -219,7 +219,8 @@ class PudEngine:
                  noisy: bool = False, seed: int = 0,
                  resident: "ResidentPolicy | bool | str | None" = None,
                  chain_blocks: bool = True, banks: int = 1,
-                 fused: bool | None = None):
+                 fused: bool | None = None,
+                 verify: bool | None = None):
         if isinstance(backend, EngineConfig):
             if config is not None:
                 raise ValueError("pass the EngineConfig positionally or "
@@ -234,6 +235,7 @@ class PudEngine:
             chain_blocks = config.chain_blocks
             banks = config.banks
             fused = config.fused
+            verify = config.verify
         assert backend in BACKENDS, backend
         self.backend = backend
         self.module = get_module(module) if module else get_module()
@@ -264,7 +266,8 @@ class PudEngine:
         self.config = EngineConfig(
             backend=backend, module=module if isinstance(module, str)
             else None, noisy=noisy, seed=seed, resident=self.policy,
-            chain_blocks=chain_blocks, banks=banks, fused=fused)
+            chain_blocks=chain_blocks, banks=banks, fused=fused,
+            verify=verify)
         #: resident mode: chain residency across chunk *blocks* — the
         #: in-bank constant rows block k leaves behind feed block k+1 via
         #: RowClone instead of fresh host writes (``False`` restores the
@@ -279,6 +282,12 @@ class PudEngine:
         #: keeps the per-bank loop (the bit-exact reference); ``True``
         #: forces fusion (``FusedGeometryError`` when it cannot apply)
         self.fused = fused
+        #: static plan-verification tri-state: ``True`` verifies every
+        #: resident plan the engine schedules
+        #: (:func:`repro.analysis.verify_plan`), ``False`` never does,
+        #: ``None`` defers to :func:`repro.analysis.default_verify`
+        #: (on under pytest, off in benchmarks)
+        self.verify = verify
         self._isa: PudIsa | None = None
         self._array: BankArray | None = None
         if backend == "dram":
@@ -476,8 +485,8 @@ class PudEngine:
             planes = {f"a{i}": a[i] for i in range(k)} \
                 | {f"b{i}": b[i] for i in range(k)}
             out = self.run_program(prog, planes)
-            return jnp.stack([out[f"s{i}"] for i in range(k)]
-                             + [out["cout"]])
+            return jnp.stack([*(out[f"s{i}"] for i in range(k)),
+                              out["cout"]])
         self._meter_program(prog, r * c * 32)
         if self.backend == "pallas":
             return kops.add_planes(a, b)
@@ -669,7 +678,8 @@ class PudEngine:
                             and self.policy is ResidentPolicy.SCHEDULED):
                         fixed = bank0_fixed()
                     sess = sessions[(bank, t)] = CC.ResidentSession(
-                        prog, isa, policy=self.policy.value, fixed=fixed)
+                        prog, isa, policy=self.policy.value, fixed=fixed,
+                        verify=self.verify)
                 res = sess.run(ins)
             else:
                 plan = None
@@ -679,6 +689,7 @@ class PudEngine:
                         shared = bank0_fixed()
                     plan = CC.schedule_resident(prog, isa,
                                                 policy="scheduled",
+                                                verify=self.verify,
                                                 _fixed=shared)
                 res = CC.run_sim(prog, ins, isa, resident=self.policy,
                                  plan=plan)
@@ -713,8 +724,9 @@ class PudEngine:
         n_chunks = -(-n_bits // w)
         pad = n_chunks * w - n_bits
         if pad:
-            bits = np.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
-        return bits.reshape(bits.shape[:-1] + (n_chunks, w))
+            bits = np.pad(bits,
+                          [*[(0, 0)] * (bits.ndim - 1), (0, pad)])
+        return bits.reshape((*bits.shape[:-1], n_chunks, w))
 
     def _dram_nary(self, planes: jax.Array, op: str) -> jax.Array:
         pl = np.asarray(planes)

@@ -137,7 +137,7 @@ class ServeEngine:
             valid[0, :s] = True
             # per-layer caches are stacked (L, B, ...): slice batch axis 1
             slot_caches = jax.tree.map(
-                lambda c: c[:, slot:slot + 1] if c.ndim >= 2 else c,
+                lambda c, s=slot: c[:, s:s + 1] if c.ndim >= 2 else c,
                 self.caches)
             logits, new_slot_caches = self._prefill(
                 self.params, jnp.asarray(tok), jnp.asarray(valid),

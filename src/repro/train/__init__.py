@@ -1,1 +1,1 @@
-from .step import build_train_step, build_eval_step, init_state  # noqa: F401
+from .step import build_train_step, build_eval_step, init_state

@@ -47,7 +47,7 @@ class _Strategy:
         return _Strategy(draw)
 
 
-class strategies:  # noqa: N801 - mirrors `hypothesis.strategies` module name
+class strategies:  # mirrors `hypothesis.strategies` module name
     @staticmethod
     def integers(min_value=0, max_value=2 ** 31 - 1) -> _Strategy:
         return _Strategy(

@@ -37,7 +37,8 @@ KNOWN_RESIDUALS = {"op.die.and2.4gb_a_vs_m"}
 def test_all_claims_within_loose_bound():
     """No claim drifts arbitrarily: everything within 10 points except the
     single documented known residual."""
-    for name, (paper, model, delta) in C.residuals(A.DEFAULT_PARAMS).items():
+    for name, (_paper, _model, delta) in \
+            C.residuals(A.DEFAULT_PARAMS).items():
         if name in KNOWN_RESIDUALS:
             continue
         assert abs(delta) <= 10.0, f"{name}: {delta:+.2f}"
@@ -48,7 +49,8 @@ def test_monotonicity_obs11():
     assert C.monotonicity_penalty(A.DEFAULT_PARAMS) == 0.0
     for op in OPS:
         vals = [A.boolean_success_avg(op, n) for n in NS]
-        assert all(b > a for a, b in zip(vals, vals[1:])), (op, vals)
+        assert all(b > a for a, b in zip(vals, vals[1:], strict=False)), \
+            (op, vals)
 
 
 def test_or_beats_and_obs12():
@@ -69,7 +71,7 @@ def test_success_is_probability():
 
 def test_not_success_decreases_with_dst_rows_obs4():
     vals = [A.not_success(d, pattern="N2N") for d in (2, 4, 8, 16, 32)]
-    assert all(b < a for a, b in zip(vals, vals[1:]))
+    assert all(b < a for a, b in zip(vals, vals[1:], strict=False))
 
 
 def test_n2n_beats_nn_obs5():

@@ -1,0 +1,431 @@
+"""Static analysis: plan verifier + DDR4 command-log timing linter.
+
+* clean property (hypothesis; the in-repo stub keeps it collectable
+  without it): every ``schedule_resident`` plan of a random DAG program
+  verifies *clean* under both policies,
+* mutation matrix: every ``PROG-*`` / ``PLAN-*`` rule fires on a
+  targeted corruption of a known-clean plan — asserted on exact rule
+  IDs, never on message text,
+* TimingChecker units: every bank-scope ``TIME-*`` rule fires on a
+  synthetic primitive stream; clean sim logs lint to zero violations
+  with the deliberate PuD gaps tallied separately as ``by_design``,
+* command-log provenance (``LogEvent`` bank/sub/seq) and the
+  cross-bank ``lint_bank_array`` rank-level tRRD/tFAW accounting.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import analysis
+from repro.analysis.timing import Primitive
+from repro.core import charz
+from repro.core import compiler as CC
+from repro.core.bankarray import BankArray
+from repro.core.device import get_module, timings_for
+from repro.core.isa import PudIsa
+from repro.core.policy import EngineConfig
+from repro.core.simulator import BankSim, CommandLog
+
+POLICIES = ("greedy", "scheduled")
+
+
+def _fresh_isa(trials=None, row_bits=128, seed=9):
+    return PudIsa(BankSim(row_bits=row_bits, error_model="ideal",
+                          seed=seed, trials=trials))
+
+
+def _plan(name="xor", policy="greedy", **kw):
+    prog = charz.get_program(name)
+    return prog, CC.schedule_resident(prog, _fresh_isa(**kw),
+                                      policy=policy, verify=False)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+def _mutate(plan, si, **changes):
+    plan.steps[si] = dataclasses.replace(plan.steps[si], **changes)
+
+
+# ---------------------------------------------------------------------------
+# clean plans verify clean
+# ---------------------------------------------------------------------------
+@st.composite
+def dag_programs(draw):
+    """A random SSA Program: 1-4 inputs, optional const, 1-10 Boolean /
+    NOT ops over earlier registers, 1-2 outputs."""
+    prog = CC.Program()
+    n_in = draw(st.integers(min_value=1, max_value=4))
+    for k in range(n_in):
+        prog.instrs.append(CC.Instr("input", k, name=f"x{k}"))
+    regs = list(range(n_in))
+    if draw(st.booleans()):
+        prog.instrs.append(CC.Instr("const", len(regs),
+                                    value=draw(st.booleans())))
+        regs.append(len(regs))
+    n_ops = draw(st.integers(min_value=1, max_value=10))
+    for _ in range(n_ops):
+        op = draw(st.sampled_from(["not", "and", "or", "nand", "nor"]))
+        dst = len(regs)
+        if op == "not":
+            srcs = (draw(st.sampled_from(regs)),)
+        else:
+            fanin = draw(st.integers(min_value=2, max_value=3))
+            srcs = tuple(draw(st.sampled_from(regs)) for _ in range(fanin))
+        prog.instrs.append(CC.Instr(op, dst, srcs))
+        regs.append(dst)
+    prog.n_regs = len(regs)
+    prog.outputs["out"] = regs[-1]
+    if draw(st.booleans()):
+        prog.outputs["aux"] = draw(st.sampled_from(regs))
+    return prog
+
+
+@settings(max_examples=12, deadline=None)
+@given(prog=dag_programs(), seed=st.integers(min_value=0, max_value=7),
+       policy=st.sampled_from(POLICIES))
+def test_random_dag_plans_verify_clean(prog, seed, policy):
+    """Property: the verifier never flags a planner-produced plan."""
+    plan = CC.schedule_resident(prog, _fresh_isa(row_bits=64, seed=seed),
+                                policy=policy, verify=False)
+    assert analysis.verify_plan(prog, plan) == []
+
+
+@pytest.mark.parametrize("name", charz.PROGRAMS)
+@pytest.mark.parametrize("policy", POLICIES)
+def test_zoo_plans_verify_clean(name, policy):
+    prog, plan = _plan(name, policy)
+    assert analysis.verify_program(prog) == []
+    assert analysis.verify_plan(prog, plan) == []
+
+
+def test_session_replans_verify_with_carried_state():
+    """Session replans must verify against the carry/pins pre-state the
+    planner received (carried const rows are live, not use-after-evict)."""
+    prog = charz.get_program("xor")
+    isa = _fresh_isa(trials=2)
+    sess = CC.ResidentSession(prog, isa, policy="scheduled", verify=True)
+    rng = np.random.default_rng(0)
+    for _ in range(3):          # block 2+ replans against carried rows
+        ins = {n: rng.integers(0, 2, (2, isa.width), dtype=np.uint8)
+               for n in ("a", "b")}
+        sess.run(ins)
+
+
+# ---------------------------------------------------------------------------
+# mutation matrix: program-level rules
+# ---------------------------------------------------------------------------
+def test_prog_ssa_multi_assignment():
+    prog = CC.Program([CC.Instr("input", 0, name="a"),
+                       CC.Instr("input", 0, name="b")], {"out": 0}, 1)
+    assert "PROG-SSA-MULTI" in _rules(analysis.verify_program(prog))
+
+
+def test_prog_ssa_use_before_def():
+    prog = CC.Program([CC.Instr("and", 0, (1, 2))], {"out": 0}, 3)
+    assert "PROG-SSA-UNDEF" in _rules(analysis.verify_program(prog))
+
+
+@pytest.mark.parametrize("instr", [
+    CC.Instr("and", 1, (0,)),                       # n-ary with 1 operand
+    CC.Instr("nor", 1, tuple([0] * 17)),            # beyond the 16-input cap
+    CC.Instr("not", 1, (0, 0)),                     # NOT with 2 operands
+    CC.Instr("input", 1, (0,), name="b"),           # leaf with operands
+])
+def test_prog_arity(instr):
+    prog = CC.Program([CC.Instr("input", 0, name="a"), instr], {"out": 1}, 2)
+    assert "PROG-ARITY" in _rules(analysis.verify_program(prog))
+
+
+def test_prog_unknown_op():
+    prog = CC.Program([CC.Instr("xor3", 0)], {"out": 0}, 1)
+    assert "PROG-OP-UNKNOWN" in _rules(analysis.verify_program(prog))
+
+
+def test_prog_undefined_output():
+    prog = CC.Program([CC.Instr("input", 0, name="a")], {"out": 42}, 1)
+    assert "PROG-OUT-UNDEF" in _rules(analysis.verify_program(prog))
+
+
+def test_verify_plan_reports_program_findings_first():
+    """A malformed program short-circuits the replay (its expectations
+    would be meaningless)."""
+    _, plan = _plan()
+    bad = CC.Program([CC.Instr("and", 0, (1, 2))], {"out": 0}, 3)
+    assert "PROG-SSA-UNDEF" in _rules(analysis.verify_plan(bad, plan))
+
+
+# ---------------------------------------------------------------------------
+# mutation matrix: plan-level rules (corrupt a clean plan, match rule IDs)
+# ---------------------------------------------------------------------------
+def test_plan_polarity_flipped_demorgan():
+    prog, plan = _plan("maj3", "scheduled")
+    si = next(i for i, s in enumerate(plan.steps) if s.kind == "bool")
+    _mutate(plan, si, demorgan=not plan.steps[si].demorgan)
+    assert "PLAN-POLARITY" in _rules(analysis.verify_plan(prog, plan))
+
+
+def test_plan_row_alias_swapped_write_source():
+    """A write source staging the wrong register's host word."""
+    prog, plan = _plan("xor", "greedy")
+    ins = [i.dst for i in prog.instrs if i.op == "input"]
+    for si, stp in enumerate(plan.steps):
+        if stp.kind != "bool":
+            continue
+        for k, src in enumerate(stp.sources):
+            if src[0] == "write" and any(r != src[1] for r in ins):
+                other = next(r for r in ins if r != src[1])
+                srcs2 = list(stp.sources)
+                srcs2[k] = ("write", other, src[2])
+                _mutate(plan, si, sources=tuple(srcs2))
+                assert "PLAN-ROW-ALIAS" in _rules(
+                    analysis.verify_plan(prog, plan))
+                return
+    pytest.fail("xor greedy plan lost its host write-staging sources")
+
+
+def test_plan_use_after_evict_dead_clone_source():
+    """A compute clone reading a row nothing ever wrote."""
+    prog, plan = _plan("add4", "scheduled")
+    for si, stp in enumerate(plan.steps):
+        if stp.kind != "bool":
+            continue
+        for k, src in enumerate(stp.sources):
+            if src[0] == "clone":
+                srcs2 = list(stp.sources)
+                srcs2[k] = ("clone", 9998)          # never-written row
+                _mutate(plan, si, sources=tuple(srcs2))
+                assert "PLAN-USE-AFTER-EVICT" in _rules(
+                    analysis.verify_plan(prog, plan))
+                return
+    pytest.fail("add4 scheduled plan lost its clone sources")
+
+
+def test_plan_clone_clobber_staged_source():
+    """A clone sourcing a row this step's own staging already overwrote
+    (the pending-activation-pattern race)."""
+    prog, plan = _plan("add4", "scheduled")
+    for si, stp in enumerate(plan.steps):
+        if stp.kind != "bool":
+            continue
+        ks = [k for k, s in enumerate(stp.sources) if s[0] == "clone"]
+        if len(ks) < 2:
+            continue
+        k0, k1 = ks[0], ks[1]
+        srcs2 = list(stp.sources)
+        # k1 now clones the compute row k0 staged moments earlier
+        srcs2[k1] = ("clone", int(stp.act.rows_l[k0]))
+        _mutate(plan, si, sources=tuple(srcs2))
+        assert "PLAN-CLONE-CLOBBER" in _rules(
+            analysis.verify_plan(prog, plan))
+        return
+    pytest.fail("add4 scheduled plan lost its multi-clone bool steps")
+
+
+def test_plan_pin_conflict_unknown_input():
+    prog, plan = _plan("xor", "scheduled")
+    plan.pins = {"no-such-input": ((3, False),)}
+    assert "PLAN-PIN-CONFLICT" in _rules(analysis.verify_plan(prog, plan))
+
+
+def test_plan_pin_conflict_colliding_rows():
+    prog, plan = _plan("xor", "scheduled")
+    plan.pins = {"a": ((5, False),), "b": ((5, False),)}
+    assert "PLAN-PIN-CONFLICT" in _rules(analysis.verify_plan(prog, plan))
+
+
+def test_plan_output_missing():
+    prog, plan = _plan("maj3", "greedy")
+    plan.steps = [s for s in plan.steps if s.kind != "output"]
+    assert "PLAN-OUTPUT-MISSING" in _rules(analysis.verify_plan(prog, plan))
+
+
+def test_plan_log_mismatch_inflated_tally():
+    prog, plan = _plan("xor", "greedy")
+    plan.writes += 1
+    assert "PLAN-LOG-MISMATCH" in _rules(analysis.verify_plan(prog, plan))
+
+
+# ---------------------------------------------------------------------------
+# verify wiring: schedule_resident / EngineConfig / default_verify
+# ---------------------------------------------------------------------------
+def test_schedule_resident_verify_raises_on_error(monkeypatch):
+    prog = charz.get_program("xor")
+    bad = [analysis.Finding("PLAN-ROW-ALIAS", analysis.ERROR, (0,),
+                            "injected")]
+    monkeypatch.setattr(analysis, "verify_plan", lambda *a, **k: bad)
+    with pytest.raises(analysis.PlanVerificationError) as ei:
+        CC.schedule_resident(prog, _fresh_isa(), policy="greedy",
+                             verify=True)
+    assert ei.value.findings == bad
+    # warnings never raise; verify=False skips the gate entirely
+    warn = [analysis.Finding("PLAN-LOG-MISMATCH", analysis.WARNING, (),
+                             "advisory")]
+    monkeypatch.setattr(analysis, "verify_plan", lambda *a, **k: warn)
+    CC.schedule_resident(prog, _fresh_isa(), policy="greedy", verify=True)
+    monkeypatch.setattr(analysis, "verify_plan",
+                        lambda *a, **k: pytest.fail("verify=False ran"))
+    CC.schedule_resident(prog, _fresh_isa(), policy="greedy", verify=False)
+
+
+def test_default_verify_env(monkeypatch):
+    monkeypatch.delenv("FCDRAM_VERIFY", raising=False)
+    assert analysis.default_verify() is True    # pytest drives this process
+    monkeypatch.setenv("FCDRAM_VERIFY", "0")
+    assert analysis.default_verify() is False
+    monkeypatch.setenv("FCDRAM_VERIFY", "on")
+    assert analysis.default_verify() is True
+
+
+def test_engine_config_verify_tristate(monkeypatch):
+    monkeypatch.delenv("FCDRAM_VERIFY", raising=False)
+    with pytest.raises(TypeError):
+        EngineConfig(verify="yes")
+    assert EngineConfig(verify=True).resolved_verify() is True
+    assert EngineConfig(verify=False).resolved_verify() is False
+    assert EngineConfig().resolved_verify() is True     # pytest default
+    assert EngineConfig().with_(verify=False).verify is False
+
+
+# ---------------------------------------------------------------------------
+# command-log provenance (LogEvent bank/sub/seq)
+# ---------------------------------------------------------------------------
+def test_command_log_events_provenance():
+    prog = charz.get_program("xor")
+    isa = PudIsa(BankSim(row_bits=64, error_model="ideal", seed=3, bank=5))
+    rng = np.random.default_rng(0)
+    ins = {n: rng.integers(0, 2, (isa.width,)).astype(np.uint8)
+           for n in ("a", "b")}
+    CC.run_sim(prog, ins, isa, resident="scheduled")
+    log = isa.sim.log
+    assert log.events, "execution recorded no events"
+    assert [e.seq for e in log.events] == list(range(len(log.events)))
+    assert all(e.bank == 5 for e in log.events)
+    got = {}
+    for e in log.events:
+        got[e.cmd] = got.get(e.cmd, 0) + e.count
+    assert got == log.counts
+    assert abs(sum(e.t_ns * e.count for e in log.events)
+               - log.time_ns) < 1e-6
+    log.reset()
+    assert log.events == [] and log.counts == {}
+
+
+def test_command_log_add_defaults():
+    log = CommandLog()
+    log.add("WR", 30.0, 50.0)                   # legacy call site shape
+    log.add("RD", 27.0, 40.0, count=3, bank=2, sub=1)
+    assert (log.events[0].bank, log.events[0].sub) == (0, -1)
+    assert (log.events[1].bank, log.events[1].sub) == (2, 1)
+    assert log.counts == {"WR": 1, "RD": 3}
+
+
+# ---------------------------------------------------------------------------
+# timing linter: rule units on synthetic primitive streams
+# ---------------------------------------------------------------------------
+def _T():
+    return timings_for(get_module())
+
+
+def test_ddr4_rules_cover_the_documented_set():
+    ids = {r.rule_id for r in analysis.ddr4_rules(_T())}
+    assert ids == {"TIME-TRCD", "TIME-TRAS", "TIME-TRP", "TIME-TWR",
+                   "TIME-TRRD", "TIME-TFAW"}
+
+
+@pytest.mark.parametrize("stream,rule", [
+    ([Primitive(0.0, "ACT", 0, 0), Primitive(5.0, "WR", 0, 0)],
+     "TIME-TRCD"),
+    ([Primitive(0.0, "ACT", 0, 0), Primitive(10.0, "PRE", 0, 0)],
+     "TIME-TRAS"),
+    ([Primitive(0.0, "PRE", 0, 0), Primitive(5.0, "ACT", 0, 0)],
+     "TIME-TRP"),
+    ([Primitive(0.0, "WR", 0, 0), Primitive(5.0, "PRE", 0, 0)],
+     "TIME-TWR"),
+])
+def test_timing_rule_fires(stream, rule):
+    rep = analysis.TimingChecker(_T()).lint(stream)
+    assert rep.violations.get(rule, 0) >= 1
+
+
+def test_timing_by_design_gaps_are_not_violations():
+    t = _T()
+    stream = [Primitive(0.0, "ACT", 0, 0),
+              Primitive(1.5, "PRE", 0, 0, "by_design")]
+    rep = analysis.TimingChecker(t).lint(stream)
+    assert rep.total_violations == 0
+    assert rep.by_design == {"TIME-TRAS": 1}
+
+
+def test_timing_deficit_gaps_report_shortfall_ns():
+    t = _T()
+    gap = t.tRCD + t.tWR                        # idealized WR occupancy
+    stream = [Primitive(0.0, "ACT", 0, 0),
+              Primitive(gap, "PRE", 0, 0, "deficit")]
+    rep = analysis.TimingChecker(t).lint(stream)
+    assert rep.total_violations == 0
+    assert rep.deficits == {"TIME-TRAS": 1}
+    assert rep.deficit_ns == pytest.approx(t.tRAS - gap)
+
+
+def test_timing_boundary_exact_gaps_are_legal():
+    t = _T()
+    stream = [Primitive(0.0, "ACT", 0, 0), Primitive(t.tRAS, "PRE", 0, 0),
+              Primitive(t.tRAS + t.tRP, "ACT", 0, 0)]
+    rep = analysis.TimingChecker(t).lint(stream)
+    assert rep.total_violations == 0 and not rep.by_design
+
+
+def test_expand_log_offsets_and_counts():
+    t = _T()
+    log = CommandLog()
+    log.add("WR", 30.0, 50.0, count=2, bank=1, sub=0)
+    prims = analysis.expand_log(log, t)
+    assert len(prims) == 6                      # ACT/WR/PRE per repetition
+    assert [p.kind for p in prims[:3]] == ["ACT", "WR", "PRE"]
+    assert all(p.bank == 1 for p in prims)
+    assert prims[3].t == pytest.approx(30.0)    # second repetition shifted
+    assert analysis.expand_log(log, t, bank=7)[0].bank == 7
+    assert analysis.expand_log(log, t, t0=100.0)[0].t == pytest.approx(100.0)
+
+
+def test_clean_sim_log_lints_to_zero_violations():
+    """The whole point: well-formed executions violate nothing; the
+    deliberate PuD gaps land in by_design, WR/RD idealization in
+    deficits."""
+    prog = charz.get_program("maj3")
+    isa = _fresh_isa(seed=4)
+    rng = np.random.default_rng(1)
+    ins = {n: rng.integers(0, 2, (isa.width,)).astype(np.uint8)
+           for n in ("a", "b", "c")}
+    CC.run_sim(prog, ins, isa, resident="scheduled")
+    rep = analysis.TimingChecker(isa.sim.module).lint(isa.sim.log)
+    assert rep.total_violations == 0
+    assert sum(rep.by_design.values()) > 0
+    assert rep.n_acts > 0 and rep.span_ns > 0
+
+
+def test_lint_bank_array_cross_bank():
+    """Per-bank streams are violation-free; the merged rank-level ACT
+    stream quantifies the independent-bank makespan's optimism (all
+    banks at t=0 collide on tRRD/tFAW)."""
+    arr = BankArray(get_module(), banks=4, seed=0, error_model="ideal")
+    prog = charz.get_program("xor")
+    rng = np.random.default_rng(2)
+    for b in range(arr.banks):                  # identical per-bank work
+        isa = arr.isa(b)
+        ins = {n: rng.integers(0, 2, (isa.width,)).astype(np.uint8)
+               for n in ("a", "b")}
+        CC.run_sim(prog, ins, isa, resident="scheduled")
+    rep = analysis.lint_bank_array(arr)
+    assert len(rep.per_bank) == arr.banks
+    assert rep.violations == 0
+    assert rep.trrd_conflicts > 0               # ACTs collide at t=0
+    assert rep.tfaw_conflicts > 0               # 8 ACTs inside one tFAW
+    assert rep.makespan_ns > 0
+    assert rep.min_legal_makespan_ns >= rep.makespan_ns
+    assert rep.optimism_pct >= 0.0

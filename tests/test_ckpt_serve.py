@@ -27,7 +27,8 @@ def test_save_restore_roundtrip(tmp_path):
     tmpl = jax.tree.map(jnp.zeros_like, state)
     step, restored = cm.restore(tmpl)
     assert step == 7
-    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored),
+                    strict=True):
         assert jnp.array_equal(a, b)
 
 
@@ -85,7 +86,8 @@ def test_elastic_restore_resumes_training(tmp_path):
                                                 CFG, tc))
     tmpl = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tmpl)
     step, state2 = cm.restore(tmpl)
-    for a, b2 in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+    for a, b2 in zip(jax.tree.leaves(state), jax.tree.leaves(state2),
+                     strict=True):
         assert jnp.array_equal(a, b2)
     b = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
     state2, m2 = fn(state2, b)

@@ -50,7 +50,7 @@ _SCRIPT = textwrap.dedent("""
     dl = abs(float(out_metrics["loss"]) - float(ref_metrics["loss"]))
     dp = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
         jax.tree.leaves(ref_state["params"]),
-        jax.tree.leaves(out_state["params"])))
+        jax.tree.leaves(out_state["params"]), strict=True))
     # --- gradient compression under sharding -------------------------------
     tc2 = TrainConfig(learning_rate=1e-3, grad_compression="int8_ef")
     state2 = TS.init_state(jax.random.PRNGKey(0), cfg, tc2)

@@ -10,6 +10,7 @@ Contract under test:
 * ``EngineConfig`` is frozen, validates its fields, and drives
   ``PudEngine`` identically to the equivalent kwargs.
 """
+import dataclasses
 import warnings
 
 import numpy as np
@@ -135,7 +136,7 @@ def test_legacy_resident_attr_spellings_kept():
 # ---------------------------------------------------------------------------
 def test_engine_config_frozen_and_validated():
     cfg = EngineConfig(backend="dram", banks=4)
-    with pytest.raises(Exception):      # frozen dataclass
+    with pytest.raises(dataclasses.FrozenInstanceError):
         cfg.banks = 8
     with pytest.raises(ValueError):
         EngineConfig(banks=0)

@@ -175,7 +175,7 @@ def test_pinned_session_matches_restaged_session():
                "b": rng.integers(0, 2, (2, isa.width)).astype(np.uint8)}
         rng = np.random.default_rng(7)      # same inputs for both modes
         runs.append([sess.run(ins) for _ in range(3)])
-    for o_pin, o_stg in zip(*runs):
+    for o_pin, o_stg in zip(*runs, strict=True):
         assert np.array_equal(o_pin["out"], o_stg["out"])
 
 

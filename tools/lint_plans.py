@@ -1,0 +1,113 @@
+"""Static-analysis CI gate: plan verifier + DDR4 timing linter.
+
+Two exact gates, both must hold for every configuration:
+
+* **Plan verification** — every program in the characterization zoo
+  (``charz.PROGRAMS``) scheduled under every resident policy
+  (``greedy``, ``scheduled``) must verify *clean*:
+  :func:`repro.analysis.verify_plan` returns zero findings of any
+  severity.  This is stricter than the engine's runtime gate (which
+  only raises on errors): the zoo plans are the reference artifacts,
+  so even warnings fail CI.
+* **Timing lint** — a multi-bank workload executed both through the
+  per-bank loop and the bank-fused path must produce command logs with
+  zero DDR4 timing violations (``ArrayTimingReport.violations == 0``).
+  Deliberately-violated gaps (APA/Frac/RowClone) are classified
+  ``by_design`` and reported, not counted.
+
+Run from the repository root:  PYTHONPATH=src python tools/lint_plans.py
+Exit status 1 on any finding/violation — the CI static-analysis gate.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+import numpy as np
+
+from repro import analysis
+from repro.core import charz
+from repro.core import compiler as CC
+from repro.core.device import get_module
+from repro.core.isa import PudIsa
+from repro.core.policy import ResidentPolicy
+from repro.core.simulator import BankSim
+from repro.pud.engine import PudEngine
+
+POLICIES = ("greedy", "scheduled")
+
+
+def lint_zoo_plans() -> int:
+    """Verify every zoo program x policy plan; return # findings."""
+    n_findings = 0
+    isa = PudIsa(BankSim(get_module(), seed=0, trials=4))
+    for name in charz.PROGRAMS:
+        prog = charz.get_program(name)
+        prog_findings = analysis.verify_program(prog)
+        for f in prog_findings:
+            print(f"FAIL  {name}: {f}")
+        n_findings += len(prog_findings)
+        for pol in POLICIES:
+            plan = CC.schedule_resident(prog, isa, policy=pol,
+                                        verify=False)
+            findings = analysis.verify_plan(prog, plan)
+            for f in findings:
+                print(f"FAIL  {name}/{pol}: {f}")
+            n_findings += len(findings)
+            if not findings:
+                print(f"ok    {name}/{pol}: {len(plan.steps)} steps, "
+                      f"0 findings")
+    return n_findings
+
+
+def _engine_workload(fused: bool) -> PudEngine:
+    """A small 2-bank workload exercised end-to-end (loop or fused)."""
+    import jax.numpy as jnp
+    eng = PudEngine("dram", banks=2, fused=fused,
+                    resident=ResidentPolicy.HOST if fused
+                    else ResidentPolicy.SCHEDULED,
+                    verify=False)
+    rng = np.random.default_rng(7)
+    prog = charz.get_program("xor")
+    ins = {k: jnp.asarray(np.asarray(
+        rng.integers(0, 2**32, (4, 4), dtype=np.uint32)))
+        for k in ("a", "b")}
+    eng.run_program(prog, ins)
+    return eng
+
+
+def lint_engine_logs() -> int:
+    """Timing-lint loop-path and fused-path BankArray logs."""
+    n_violations = 0
+    for fused in (False, True):
+        eng = _engine_workload(fused)
+        report = analysis.lint_bank_array(eng._array)
+        label = "fused" if fused else "loop"
+        by_design = sum(sum(r.by_design.values()) for r in report.per_bank)
+        print(f"{'FAIL' if report.violations else 'ok  '}  "
+              f"timing/{label}: {report.violations} violations, "
+              f"{by_design} by-design, "
+              f"makespan {report.makespan_ns:.0f} ns "
+              f"(min legal {report.min_legal_makespan_ns:.0f} ns, "
+              f"optimism {report.optimism_pct:.2f}%)")
+        for bank, rep in enumerate(report.per_bank):
+            for rule, n in sorted(rep.violations.items()):
+                print(f"FAIL  timing/{label} bank {bank}: {rule} x{n}")
+        n_violations += report.violations
+    return n_violations
+
+
+def main() -> int:
+    n_findings = lint_zoo_plans()
+    n_violations = lint_engine_logs()
+    bad = n_findings + n_violations
+    print(f"lint_plans: {n_findings} plan findings, "
+          f"{n_violations} timing violations: {'FAIL' if bad else 'ok'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
