@@ -2,9 +2,15 @@
 
 Guards the nightly characterization lane: the fresh snapshot's Monte-Carlo
 success rates (raw-op *and* program-level) must not regress by more than
-``--tol`` percentage points against the committed per-PR baseline.  Pure
-timing keys are reported but never fail the diff (CI hosts vary); success
-rates are physics — they only move if the model or the executor changed.
+``--tol`` percentage points against the committed per-PR baseline.
+*Wall-clock* timing keys are reported but never fail the diff (CI hosts
+vary); success rates are physics — they only move if the model or the
+executor changed.  *Modeled* DRAM times are a third class: the rank-legal
+schedule's ``legal_makespan_ns`` / stall splits and the roofline
+throughputs are deterministic outputs of the timing model, so they are
+gated with a small relative tolerance (``--rtol``, default 0.5%) — an
+increase beyond it means the scheduler or the timing parameters changed,
+not the host.
 
 Scheduler *counter* keys (``resident_v2.*`` polarity spills and staged
 bytes) are gated exactly: they are deterministic planner outputs, so any
@@ -21,8 +27,15 @@ bank-stacked path must stay bit-identical to the per-bank loop),
 path's exactly) and ``fused.occupancy_regression_ns`` (the occupancy
 dealer's makespan must never exceed round-robin's) are all 0.
 
+The PR-9 scheduler counters join the exact gates:
+``static.sched_violations_{loop,fused}`` and
+``roofline.sched_violations_b{N}`` (every scheduled stream must keep
+re-linting to 0), ``roofline.acts_b{N}`` (the command mix is
+deterministic) and ``roofline.gate_failures``.
+
 Usage:
     python -m benchmarks.diff_bench NEW.json [BASELINE.json] [--tol 2.0]
+                                    [--rtol 0.005]
 
 With no explicit baseline, the newest committed ``BENCH_pr*.json`` (by PR
 number) in the repository root is used.  Exit status 1 on regression.
@@ -80,9 +93,41 @@ def _counter_keys(snap: dict) -> dict[str, float]:
             out[f"fused.{kind}"] = float(fu[kind])
     sa = snap.get("static_detail", {})
     for kind in ("verify_findings", "timing_violations_loop",
-                 "timing_violations_fused"):
+                 "timing_violations_fused", "sched_violations_loop",
+                 "sched_violations_fused"):
         if kind in sa:
             out[f"static.{kind}"] = float(sa[kind])
+    ro = snap.get("roofline_detail", {})
+    for kind, val in ro.items():
+        if kind.startswith(("acts_b", "sched_violations_b")) \
+                or kind == "gate_failures":
+            out[f"roofline.{kind}"] = float(val)
+    return out
+
+
+def _timing_keys(snap: dict) -> dict[str, float]:
+    """Modeled DRAM-time keys gated with a relative tolerance.
+
+    These are deterministic outputs of the timing model (no wall clock
+    involved): the rank-legal schedule's makespan and stall split from
+    the static section, and the roofline makespans / throughputs.  An
+    increase beyond ``--rtol`` is a scheduler regression."""
+    out: dict[str, float] = {}
+    sa = snap.get("static_detail", {})
+    for kind in ("legal_makespan_ns_loop", "legal_makespan_ns_fused",
+                 "refresh_stall_ns_loop", "refresh_stall_ns_fused",
+                 "rank_stall_ns_loop", "rank_stall_ns_fused"):
+        if kind in sa:
+            out[f"static.{kind}"] = float(sa[kind])
+    ro = snap.get("roofline_detail", {})
+    for kind, val in ro.items():
+        if kind.startswith(("makespan_ns_b", "legal_makespan_ns_b",
+                            "min_legal_makespan_ns_b",
+                            "refresh_stall_ns_b", "rank_stall_ns_b")):
+            out[f"roofline.{kind}"] = float(val)
+        elif kind.startswith("ops_per_us_"):
+            # throughput: a *decrease* is the regression direction
+            out[f"roofline.{kind}"] = -float(val)
     return out
 
 
@@ -98,7 +143,8 @@ def _baseline_path() -> str:
     return max(cands, key=prnum)
 
 
-def diff(new: dict, base: dict, tol_pts: float) -> list[str]:
+def diff(new: dict, base: dict, tol_pts: float,
+         rtol: float = 0.005) -> list[str]:
     """Regression messages (empty = pass)."""
     nk, bk = _success_keys(new), _success_keys(base)
     msgs = []
@@ -120,13 +166,29 @@ def diff(new: dict, base: dict, tol_pts: float) -> list[str]:
         if nc[key] > bc[key]:
             msgs.append(f"{key} increased {bc[key]:.0f} -> {nc[key]:.0f} "
                         "(counter keys are gated exactly)")
-    only_new = sorted((set(nk) - set(bk)) | (set(nc) - set(bc)))
+    # modeled-time gates: deterministic timing-model outputs, relative
+    # tolerance (throughput keys are sign-flipped so "bigger is worse"
+    # holds uniformly)
+    nt, bt = _timing_keys(new), _timing_keys(base)
+    for key in sorted(set(nt) & set(bt)):
+        worse = nt[key] - bt[key] > rtol * abs(bt[key]) + 1e-9
+        status = "REGRESSION" if worse else "ok"
+        print(f"{status:>10}  {key}: {abs(bt[key]):.1f} -> "
+              f"{abs(nt[key]):.1f}")
+        if worse:
+            msgs.append(f"{key} worsened {abs(bt[key]):.1f} -> "
+                        f"{abs(nt[key]):.1f} (rtol {rtol})")
+    only_new = sorted((set(nk) - set(bk)) | (set(nc) - set(bc))
+                      | (set(nt) - set(bt)))
     if only_new:
         print(f"new metrics (no baseline): {', '.join(only_new)}")
-    missing = sorted((set(bk) - set(nk)) | (set(bc) - set(nc)))
+    missing = sorted((set(bk) - set(nk)) | (set(bc) - set(nc))
+                     | (set(bt) - set(nt)))
     if missing:
-        # a silently-vanished metric must not read as "no regression"
-        msgs.append("baseline metrics missing from the new snapshot: "
+        # a silently-vanished metric must not read as "no regression":
+        # every baseline key must still exist in the new snapshot
+        msgs.append("baseline metrics missing from the new snapshot "
+                    "(removed or renamed without updating the baseline): "
                     + ", ".join(missing))
     if not set(nk) & set(bk):
         msgs.append("no overlapping success-rate keys between snapshots")
@@ -135,9 +197,14 @@ def diff(new: dict, base: dict, tol_pts: float) -> list[str]:
 
 def main(argv: list[str]) -> int:
     tol = 2.0
+    rtol = 0.005
     if "--tol" in argv:
         i = argv.index("--tol")
         tol = float(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    if "--rtol" in argv:
+        i = argv.index("--rtol")
+        rtol = float(argv[i + 1])
         argv = argv[:i] + argv[i + 2:]
     args = [a for a in argv if not a.startswith("--")]
     if not args:
@@ -149,8 +216,8 @@ def main(argv: list[str]) -> int:
     with open(base_path) as f:
         base = json.load(f)
     print(f"# diffing {new_path} against baseline {base_path} "
-          f"(tolerance {tol} pts)")
-    msgs = diff(new, base, tol)
+          f"(tolerance {tol} pts, modeled-time rtol {rtol})")
+    msgs = diff(new, base, tol, rtol)
     if msgs:
         print("\nFAIL:")
         for m in msgs:

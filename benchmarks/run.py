@@ -28,13 +28,18 @@ Prints CSV sections:
   * static analysis: plan-verifier (symbolic replay) overhead over the
     program zoo and DDR4 timing lint of the engine command logs
     (violations gated to 0; by-design PuD gaps and the independent-bank
-    makespan's tRRD/tFAW optimism quantified).
+    makespan's tRRD/tFAW optimism quantified), plus the rank-legal
+    schedule of the same logs (post-schedule violations gated to 0),
+  * roofline: APA command throughput vs the DDR4 command-bus ceiling
+    across 1-16 banks — the optimistic independent-bank model scales
+    linearly while the rank-legal schedule flattens at the 4-ACT/tFAW
+    rate limit (every scheduled stream must re-lint to 0 violations).
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]
                                              [--only SECTION]...
 
 ``--json`` additionally writes machine-readable timings + success-rate
-deltas (default path BENCH_pr8.json) so CI can archive the trajectory;
+deltas (default path BENCH_pr9.json) so CI can archive the trajectory;
 ``benchmarks.diff_bench`` compares snapshots across PRs/nightlies.
 ``--only`` (repeatable) runs just the named sections — see
 ``_sections`` for the keys (e.g. ``--only fused --only bankarray``).
@@ -919,7 +924,12 @@ def static_analysis(fast=False):
       JEDEC rule set; per-bank ``violations`` must be 0 (exact gate)
       while the deliberate PuD gaps land in ``by_design``, and the
       rank-level tRRD/tFAW merge quantifies the independent-bank
-      makespan's optimism (``min_legal_makespan_ns`` lower bound).
+      makespan's optimism (``min_legal_makespan_ns`` lower bound),
+    * **rank schedule** — the same logs run through the event-driven
+      scheduler (``analysis.schedule_bank_array``): the legal makespan
+      with its refresh/rank stall split, and the proof obligation that
+      the scheduled stream re-lints to 0 violations (exact gate on
+      ``static.sched_violations_{loop,fused}``).
     """
     import jax.numpy as jnp
 
@@ -971,6 +981,7 @@ def static_analysis(fast=False):
             0, 2**32, (4, 4), dtype=np.uint32))) for k in ("a", "b")}
         eng.run_program(prog, ins)
         rep = analysis.lint_bank_array(eng._array)
+        tl = eng.schedule_timing()
         label = "fused" if fused else "loop"
         by_design = sum(sum(r.by_design.values()) for r in rep.per_bank)
         deficit_ns = sum(r.deficit_ns for r in rep.per_bank)
@@ -978,17 +989,114 @@ def static_analysis(fast=False):
                      round(deficit_ns, 1), rep.trrd_conflicts,
                      rep.tfaw_conflicts, round(rep.makespan_ns, 1),
                      round(rep.min_legal_makespan_ns, 1),
-                     round(rep.optimism_pct, 2)))
+                     round(rep.optimism_pct, 2),
+                     round(tl.legal_makespan_ns, 1),
+                     tl.relint_violations))
         detail[f"timing_violations_{label}"] = rep.violations
         detail[f"timing_by_design_{label}"] = by_design
         detail[f"makespan_ns_{label}"] = round(rep.makespan_ns, 1)
         detail[f"min_legal_makespan_ns_{label}"] = round(
             rep.min_legal_makespan_ns, 1)
+        detail[f"legal_makespan_ns_{label}"] = round(
+            tl.legal_makespan_ns, 1)
+        detail[f"refresh_stall_ns_{label}"] = round(
+            tl.refresh_stall_ns, 1)
+        detail[f"rank_stall_ns_{label}"] = round(tl.rank_stall_ns, 1)
+        detail[f"sched_violations_{label}"] = tl.relint_violations
     _csv("DDR4 timing lint of engine command logs (2-bank loop vs fused)",
          rows, "path,violations,by_design,deficit_ns,trrd_conflicts,"
                "tfaw_conflicts,makespan_ns,min_legal_makespan_ns,"
-               "optimism_pct")
+               "optimism_pct,legal_makespan_ns,sched_violations")
+    sv = (detail["sched_violations_loop"]
+          + detail["sched_violations_fused"])
+    _p(f"post-schedule lint violations: {sv} (target 0); legal makespan "
+       f"loop {detail['legal_makespan_ns_loop']}ns vs optimistic "
+       f"{detail['makespan_ns_loop']}ns")
     RESULTS["static_detail"] = detail
+
+
+def roofline(fast=False):
+    """APA throughput vs DDR4 command bandwidth across bank counts.
+
+    Each bank runs the same APA-heavy characterization workload (rounds
+    of 4-input NAND at 8 trials), so the optimistic independent-bank
+    model predicts a flat makespan — N banks finish N times the work in
+    the time of one.  The rank-legal schedule instead serializes ACTs
+    under tRRD and the 4-per-tFAW window: per-bank throughput flattens
+    once the rank ACT rate hits the ``4 / tFAW`` command-bus ceiling,
+    which is the paper's Section-6 scaling argument in roofline form.
+
+    Gates: every scheduled stream re-lints to 0 violations
+    (``roofline.sched_violations_b{N}``, exact) and
+    ``legal >= max(optimistic, min_legal)`` at every point; ACT counts
+    are deterministic counters, throughputs tolerance-gated floats.
+    """
+    from repro import analysis
+    from repro.core import charz
+    from repro.core.bankarray import BankArray
+    from repro.core.device import timings_for
+
+    rounds = 4 if fast else 8
+    rows = []
+    detail: dict = {"rounds": rounds}
+    bad = 0
+    for banks in (1, 2, 4, 8, 16):
+        arr = BankArray(banks=banks, row_bits=512, seed=3,
+                        error_model="analog", trials=8,
+                        track_unshared=False)
+        rng = np.random.default_rng(13)
+        for b in range(banks):
+            isa = arr.isa(b)
+            for _ in range(rounds):
+                isa.sim.recycle_rows()
+                ops = charz._random_bits(rng, (8, 4, isa.width))
+                isa.nary_op("nand", ops.swapaxes(0, 1))
+        t = timings_for(arr.module)
+        tl = analysis.schedule_bank_array(arr)
+        opt = float(arr.makespan_ns())
+        legal = tl.legal_makespan_ns
+        n_ops = banks * rounds
+        ceiling = 4.0 / t.tFAW * 1e3            # ACTs per us, rank-wide
+        acts_us = tl.n_acts / (legal / 1e3)
+        ok = (tl.relint_violations == 0
+              and legal >= max(opt, tl.min_legal_makespan_ns) - 1e-6)
+        bad += 0 if ok else 1
+        rows.append((banks, n_ops, tl.n_acts, round(opt, 1),
+                     round(legal, 1),
+                     round(n_ops / (opt / 1e3), 2),
+                     round(n_ops / (legal / 1e3), 2),
+                     round(acts_us, 1), round(ceiling, 1),
+                     round(tl.refresh_stall_ns, 1),
+                     round(tl.rank_stall_ns, 1),
+                     tl.relint_violations))
+        detail[f"acts_b{banks}"] = tl.n_acts
+        detail[f"sched_violations_b{banks}"] = tl.relint_violations
+        detail[f"makespan_ns_b{banks}"] = round(opt, 1)
+        detail[f"legal_makespan_ns_b{banks}"] = round(legal, 1)
+        detail[f"min_legal_makespan_ns_b{banks}"] = round(
+            tl.min_legal_makespan_ns, 1)
+        detail[f"refresh_stall_ns_b{banks}"] = round(
+            tl.refresh_stall_ns, 1)
+        detail[f"rank_stall_ns_b{banks}"] = round(tl.rank_stall_ns, 1)
+        detail[f"ops_per_us_optimistic_b{banks}"] = n_ops / (opt / 1e3)
+        detail[f"ops_per_us_legal_b{banks}"] = n_ops / (legal / 1e3)
+        detail[f"acts_per_us_legal_b{banks}"] = acts_us
+    detail["acts_per_us_ceiling"] = round(ceiling, 2)
+    detail["gate_failures"] = bad
+    _csv("Roofline: APA throughput vs DDR4 command bandwidth (1-16 banks)",
+         rows,
+         "banks,ops,acts,makespan_ns,legal_makespan_ns,"
+         "ops_per_us_opt,ops_per_us_legal,acts_per_us,act_ceiling_per_us,"
+         "refresh_stall_ns,rank_stall_ns,sched_violations")
+    flat = (detail["ops_per_us_legal_b16"]
+            / detail["ops_per_us_optimistic_b16"])
+    _p(f"roofline gate failures: {bad} (target 0); 16-bank legal "
+       f"throughput is {100 * flat:.1f}% of the optimistic model "
+       f"(ACT rate {detail['acts_per_us_legal_b16']:.1f}/us vs ceiling "
+       f"{detail['acts_per_us_ceiling']}/us)")
+    RESULTS["roofline_detail"] = detail
+    RESULTS["roofline_gate_failures"] = bad
+    return bad
 
 
 def _json_path(argv) -> str | None:
@@ -997,7 +1105,7 @@ def _json_path(argv) -> str | None:
     i = argv.index("--json")
     if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
         return argv[i + 1]
-    return "BENCH_pr8.json"
+    return "BENCH_pr9.json"
 
 
 def _sections(fast: bool, mc: bool):
@@ -1024,6 +1132,7 @@ def _sections(fast: bool, mc: bool):
         ("kernels", lambda: kernel_microbench(fast=fast)),
         ("pud_offload", pud_offload_lm),
         ("static", lambda: static_analysis(fast=fast)),
+        ("roofline", lambda: roofline(fast=fast)),
     ]
 
 

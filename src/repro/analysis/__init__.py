@@ -12,6 +12,12 @@ execution:
   (tRCD/tRAS/tRP/tWR/tRRD/tFAW/tREFI) over
   :class:`~repro.core.simulator.CommandLog` event streams, per bank and
   cross-bank over a :class:`~repro.core.bankarray.BankArray`.
+* :mod:`repro.analysis.schedule` — an event-driven rank-legal command
+  scheduler over the same per-bank streams: cross-bank ACT arbitration
+  under tRRD/tFAW, REF injection every tREFI, yielding a
+  :class:`~repro.analysis.schedule.ScheduledTimeline` whose
+  ``legal_makespan_ns`` sits next to the optimistic independent-bank
+  makespan (and whose scheduled stream re-lints to zero conflicts).
 
 Diagnostics are structured :class:`Finding` records with stable rule
 IDs (``PLAN-ROW-ALIAS``, ``TIME-TFAW``, ...) — tests and CI gates match
@@ -27,7 +33,11 @@ __all__ = [
     "Severity", "Finding", "default_verify",
     "verify_program", "verify_plan", "PlanVerificationError",
     "TimingRule", "TimingChecker", "TimingReport", "ArrayTimingReport",
-    "ddr4_rules", "expand_log", "lint_bank_array",
+    "act_rate_bound", "ddr4_rules", "expand_log", "lint_bank_array",
+    "rank_conflicts",
+    "CommandBlock", "ScheduledCommand", "BankTimeline",
+    "ScheduledTimeline", "command_blocks", "schedule_blocks",
+    "schedule_bank_array",
 ]
 
 #: severity levels, ordered: ERROR findings fail verification/gates,
@@ -74,5 +84,9 @@ def default_verify() -> bool:
 from .verify import (  # re-export after Finding exists
     PlanVerificationError, verify_plan, verify_program)
 from .timing import (
-    ArrayTimingReport, TimingChecker, TimingReport, TimingRule, ddr4_rules,
-    expand_log, lint_bank_array)
+    ArrayTimingReport, TimingChecker, TimingReport, TimingRule,
+    act_rate_bound, ddr4_rules, expand_log, lint_bank_array,
+    rank_conflicts)
+from .schedule import (
+    BankTimeline, CommandBlock, ScheduledCommand, ScheduledTimeline,
+    command_blocks, schedule_bank_array, schedule_blocks)

@@ -17,22 +17,27 @@ shortfall is reported in nanoseconds rather than counted as a violation
 (it quantifies the cost model's optimism, not a bug).
 
 Cross-bank, :func:`lint_bank_array` merges the per-bank ACT streams of a
-:class:`~repro.core.bankarray.BankArray` — whose shipped makespan model
-treats banks as fully independent — and quantifies how optimistic that
-is under the rank-level tRRD / tFAW ACT-rate limits, reporting conflict
-counts and a minimum legal makespan lower bound.
+:class:`~repro.core.bankarray.BankArray` and quantifies how optimistic
+the *optimistic* ``makespan_ns`` model (banks all start at t=0) is under
+the rank-level tRRD / tFAW ACT-rate limits, reporting conflict counts
+(:func:`rank_conflicts`, a sliding-window scan) and a minimum legal
+makespan lower bound (:func:`act_rate_bound`).  Since PR 9 the optimism
+is no longer the end of the story: :mod:`repro.analysis.schedule` turns
+the same per-bank streams into a *legal* rank schedule —
+``BankArray.legal_makespan_ns()`` reports the resulting makespan next to
+the optimistic one, and the scheduled stream re-lints to zero conflicts
+by construction.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 
 from ..core.device import (DRAMTimings, VIOLATED_TRAS_NS, VIOLATED_TRP_NS,
                            timings_for)
 
 __all__ = ["TimingRule", "TimingChecker", "TimingReport",
-           "ArrayTimingReport", "ddr4_rules", "expand_log",
-           "lint_bank_array"]
+           "ArrayTimingReport", "act_rate_bound", "ddr4_rules",
+           "expand_log", "lint_bank_array", "rank_conflicts"]
 
 #: float-compare slack: boundary-exact gaps (== tRP etc.) are legal
 _EPS = 1e-9
@@ -161,6 +166,9 @@ class TimingReport:
     #: whole refresh intervals elapsed without a REF (the logs carry no
     #: refresh traffic; informational — see TIME-TREFI)
     refresh_debt: int = 0
+    #: tREFI of the rule set that linted this stream (0 = unknown);
+    #: lets :meth:`merge` recompute ``refresh_debt`` from the merged span
+    trefi_ns: float = 0.0
 
     @property
     def total_violations(self) -> int:
@@ -175,7 +183,14 @@ class TimingReport:
         self.n_primitives += other.n_primitives
         self.n_acts += other.n_acts
         self.span_ns = max(self.span_ns, other.span_ns)
-        self.refresh_debt += other.refresh_debt
+        # merged streams run concurrently on one wall clock: the debt is
+        # a property of the merged span, not a per-stream sum (summing
+        # double-counts every shared refresh interval)
+        self.trefi_ns = max(self.trefi_ns, other.trefi_ns)
+        if self.trefi_ns > 0.0:
+            self.refresh_debt = int(self.span_ns // self.trefi_ns)
+        else:
+            self.refresh_debt = max(self.refresh_debt, other.refresh_debt)
         return self
 
 
@@ -231,6 +246,7 @@ class TimingChecker:
                             rep.violations.get(rule.rule_id, 0) + 1
             last[p.kind] = p.t
             rep.span_ns = max(rep.span_ns, p.t)
+        rep.trefi_ns = self.timings.tREFI
         rep.refresh_debt = int(rep.span_ns // self.timings.tREFI)
         return rep
 
@@ -241,13 +257,14 @@ class ArrayTimingReport:
 
     ``per_bank`` lints every bank's serial stream independently (their
     ``total_violations`` must be zero for any well-formed log — the
-    benchmark gate).  The rank-level fields quantify the shipped
-    independent-bank makespan's optimism: banks all start at t=0, so
-    the merged ACT stream ignores tRRD / tFAW; ``trrd_conflicts`` /
-    ``tfaw_conflicts`` count the collisions and
-    ``min_legal_makespan_ns`` bounds the makespan a rate-legal
-    controller schedule needs (ACT-count bounds; a lower bound, not a
-    schedule)."""
+    benchmark gate).  The rank-level fields quantify the optimistic
+    makespan model's optimism: banks all start at t=0, so the merged
+    ACT stream ignores tRRD / tFAW; ``trrd_conflicts`` /
+    ``tfaw_conflicts`` count the collisions
+    (:func:`rank_conflicts`) and ``min_legal_makespan_ns`` bounds the
+    makespan any stream-preserving rank schedule needs
+    (:func:`act_rate_bound`; a lower bound — the actual legal schedule
+    is :func:`repro.analysis.schedule.schedule_bank_array`)."""
 
     per_bank: list[TimingReport]
     trrd_conflicts: int = 0
@@ -294,6 +311,62 @@ def _bank_streams(array) -> dict[int, list[Primitive]]:
     return streams
 
 
+def rank_conflicts(acts, t: DRAMTimings) -> tuple[int, int]:
+    """(tRRD, tFAW) conflict counts of a time-sorted merged ACT stream.
+
+    Sliding-window scans, counted per arriving ACT:
+
+    * **tRRD** — an ACT closer than tRRD to *any* earlier ACT of a
+      different bank counts once.  (The pre-PR-9 scan compared only
+      adjacent pairs, so a different-bank pair inside one tRRD window
+      was missed whenever a same-bank ACT interleaved between them.)
+    * **tFAW** — an ACT whose trailing tFAW window holds more than four
+      ACTs counts once, unless the whole window is a single bank's
+      stream (a deliberate PuD burst is ``by_design``, rank pressure
+      only exists across banks).
+    """
+    trrd = tfaw = 0
+    window: list = []           # ACTs within the trailing tFAW window
+    for p in acts:
+        while window and p.t - window[0].t >= t.tFAW - _EPS:
+            window.pop(0)
+        # tRRD window is shorter than tFAW's, so scan newest-first
+        # inside it and stop at the first ACT out of tRRD range
+        for q in reversed(window):
+            if p.t - q.t >= t.tRRD - _EPS:
+                break
+            if q.bank != p.bank:
+                trrd += 1
+                break
+        window.append(p)
+        if len(window) > 4 and len({q.bank for q in window}) > 1:
+            tfaw += 1
+    return trrd, tfaw
+
+
+#: minimum tail from a stream's last ACT to its end: the shortest
+#: expansion (Frac's second pulse) closes with a violated-tRAS dwell
+#: plus the trailing tRP every modeled duration includes
+_ACT_TAIL_NS = VIOLATED_TRAS_NS
+
+
+def act_rate_bound(n_acts: int, t: DRAMTimings) -> float:
+    """Lower-bounds the makespan of *any* stream-preserving schedule of
+    ``n_acts`` rank ACTs.
+
+    Only the four-activate window yields a sound per-ACT rate bound
+    here: tFAW is enforced rank-wide (``a[i+4] >= a[i] + tFAW``), so the
+    last ACT issues no earlier than ``floor((n-1)/4) * tFAW``, and the
+    stream runs at least the shortest command tail past it.  A tRRD
+    term would be unsound — same-bank by-design ACT pairs (RowClone,
+    Frac, APA) are deliberately closer than tRRD, so ``(n-1) * tRRD``
+    over-counts on exactly the streams this repo produces (the pre-PR-9
+    bound did this, and with a full-tRC tail on top)."""
+    if n_acts <= 0:
+        return 0.0
+    return ((n_acts - 1) // 4) * t.tFAW + _ACT_TAIL_NS + t.tRP
+
+
 def lint_bank_array(array, *, timings: DRAMTimings | None = None
                     ) -> ArrayTimingReport:
     """Lint every bank of a BankArray plus the rank-level ACT limits."""
@@ -305,24 +378,9 @@ def lint_bank_array(array, *, timings: DRAMTimings | None = None
     # timeline and count tRRD / tFAW collisions
     acts = sorted((p for s in streams.values() for p in s
                    if p.kind == "ACT"), key=lambda p: p.t)
-    trrd = tfaw = 0
-    for a, b in zip(acts, acts[1:], strict=False):
-        if b.bank != a.bank and b.t - a.t < t.tRRD - _EPS:
-            trrd += 1
-    window: list[Primitive] = []
-    for p in acts:
-        window.append(p)
-        while window and p.t - window[0].t >= t.tFAW - _EPS:
-            window.pop(0)
-        if len(window) > 4 and len({q.bank for q in window}) > 1:
-            tfaw += 1
+    trrd, tfaw = rank_conflicts(acts, t)
     makespan = float(array.makespan_ns())
-    n_acts = len(acts)
-    bound = makespan
-    if n_acts > 1:
-        bound = max(bound, (n_acts - 1) * t.tRRD + t.tRC)
-        bound = max(bound,
-                    (math.ceil(n_acts / 4) - 1) * t.tFAW + t.tRC)
+    bound = max(makespan, act_rate_bound(len(acts), t))
     return ArrayTimingReport(per_bank=per_bank, trrd_conflicts=trrd,
                              tfaw_conflicts=tfaw, makespan_ns=makespan,
                              min_legal_makespan_ns=bound)

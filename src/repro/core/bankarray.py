@@ -19,10 +19,14 @@ execution time is the *makespan* — ``max`` over banks of the per-bank
 command-log time — not the sum (:meth:`makespan_ns`).  On this
 simulator the banks still execute sequentially on the host, so
 wall-clock does not scale; modeled DRAM-time throughput does, and that
-is the quantity the "Multi-bank scaling" benchmark gates.  (ROADMAP
-item 2 — a DDR timing model with tFAW/tRRD inter-bank constraints —
-will make the makespan sub-linear in banks; today banks are fully
-independent.)
+is the quantity the "Multi-bank scaling" benchmark gates.
+:meth:`makespan_ns` is deliberately *optimistic*: it assumes every bank
+issues from t=0 with a private command bus.  The rank-legal counterpart
+is :meth:`legal_makespan_ns`, which runs the
+:mod:`repro.analysis.schedule` event-driven scheduler over the same
+logs — cross-bank ACTs arbitrated under tRRD/tFAW, REF injected every
+tREFI — and is the number a JEDEC-compliant memory controller could
+actually meet (always >= the optimistic makespan).
 
 Work distribution follows the round-robin device-axis idiom of
 ``repro.launch.sharding.batch_axis_spec`` (a leading "bank" axis, items
@@ -217,9 +221,20 @@ class BankArray:
         return out
 
     def makespan_ns(self) -> float:
-        """Modeled array execution time: banks run concurrently in real
-        hardware, so the array finishes with its slowest bank."""
+        """Optimistic modeled array execution time: banks run
+        concurrently in real hardware, so the array finishes with its
+        slowest bank — ignoring rank-level command-bus arbitration
+        (tRRD/tFAW) and refresh.  See :meth:`legal_makespan_ns`."""
         return max(self.bank_time_ns())
+
+    def legal_makespan_ns(self) -> float:
+        """Rank-legal array execution time: the makespan of the
+        :func:`repro.analysis.schedule_bank_array` event-driven schedule
+        of this array's command logs — per-bank serial order preserved,
+        cross-bank ACTs arbitrated under tRRD/tFAW, REF injected every
+        tREFI.  Always >= :meth:`makespan_ns`."""
+        from .. import analysis     # analysis sits above core
+        return float(analysis.schedule_bank_array(self).legal_makespan_ns)
 
     def total_time_ns(self) -> float:
         """Sum of per-bank times — what one bank would have taken."""

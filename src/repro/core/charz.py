@@ -235,14 +235,26 @@ def _fused_mc_rounds(arr: BankArray, groups: int, run_round) -> None:
 
 def _fill_stats(stats: dict | None, arr: BankArray, groups: int,
                 tg: int) -> None:
-    """Record modeled concurrent-bank timing into a caller-passed dict."""
+    """Record modeled concurrent-bank timing into a caller-passed dict.
+
+    Reports both timing models: the optimistic independent-bank
+    ``makespan_ns`` and the rank-legal ``legal_makespan_ns`` (the
+    :mod:`repro.analysis.schedule` event-driven schedule of the same
+    logs), with the legality cost broken into cross-bank arbitration
+    (``rank_stall_ns``) and refresh (``refresh_stall_ns``) stalls."""
     if stats is None:
         return
+    from .. import analysis         # analysis sits above core
+    tl = analysis.schedule_bank_array(arr)
     stats.update({
         "banks": arr.banks, "groups": groups, "trials_per_group": tg,
         "bank_time_ns": arr.bank_time_ns(),
         "makespan_ns": arr.makespan_ns(),
         "total_time_ns": arr.total_time_ns(),
+        "legal_makespan_ns": tl.legal_makespan_ns,
+        "rank_stall_ns": tl.rank_stall_ns,
+        "refresh_stall_ns": tl.refresh_stall_ns,
+        "refreshes": tl.refreshes,
     })
 
 

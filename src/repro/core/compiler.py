@@ -47,7 +47,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .isa import CostModel, OpCost, PudIsa
+from .isa import CostModel, OpCost, PudIsa, metric_index
 from .policy import ResidentPolicy  # canonical resident spelling
 
 MAX_FANIN = 16
@@ -151,6 +151,12 @@ class Program:
         resident command stream and reconciles exactly with the
         ``BankSim`` command log a mechanical execution of that plan
         produces — measured and static cost agree by construction.
+
+        The returned :class:`~repro.core.isa.OpCost` carries both
+        metrics; ``cost(...).metric(objective)`` scalarizes it under a
+        plan-search objective (``"energy"`` -> pJ, ``"latency"`` ->
+        serial ns) — the same scalar ``schedule_resident``'s
+        dup-vs-spill gates compare under ``objective=``.
 
         >>> from repro.core import compiler as CC
         >>> prog = CC.compile_expr(CC.Xor(CC.Var("a"), CC.Var("b")))
@@ -552,8 +558,12 @@ class _ResidentPlanner:
                  carry: dict | None = None,
                  pins: dict | None = None, pin_inputs: bool = False,
                  duplicate: bool = False,
-                 dup_hints: dict[int, int] | None = None):
+                 dup_hints: dict[int, int] | None = None,
+                 objective: str = "energy"):
         self.prog, self.isa, self.sim = prog, isa, isa.sim
+        #: which of the log-exact (time_ns, energy_pj) twins the
+        #: duplication-vs-spill gates compare (see ``isa.OBJECTIVES``)
+        self._mi = metric_index(objective)
         self.order = (list(order) if order is not None
                       else list(range(len(prog.instrs))))
         self.forced = forced or {}
@@ -725,9 +735,10 @@ class _ResidentPlanner:
 
     def _dup_energy(self, s: int, need_neg: bool, depth: int,
                     seen: frozenset) -> float | None:
-        """Log-exact energy of duplicating ``s``'s producer in the dual
-        form (including recursive duplicates of wrong-side operands), or
-        None when infeasible."""
+        """Log-exact cost (in the planner's objective metric — energy by
+        default, serial ns under ``objective="latency"``) of duplicating
+        ``s``'s producer in the dual form (including recursive duplicates
+        of wrong-side operands), or None when infeasible."""
         form = self._dup_form(s)
         if form is None:
             return None
@@ -735,40 +746,41 @@ class _ResidentPlanner:
         # the form landing the needed polarity on the l side:
         # val_on_l == (is_ref == demorgan)  and we need val_on_l == not neg
         demorgan = is_ref == (not need_neg)
-        cm = self.isa.cost_model
+        cm, mi = self.isa.cost_model, self._mi
         e = 0.0
         for q in pi.srcs:
             res = (self.neg if demorgan else self.val).get(q)
             if res is not None and res[0] == "l":
-                e += cm.log_rowclone()[1]
+                e += cm.log_rowclone()[mi]
             elif q in self.host:
                 if self.pin_inputs and q in self.input_regs:
                     # the complement word parks and *pins*: blocks k >= 2
                     # of the session clone it, so the steady-state cost
                     # of this staging is one RowClone, not a bus write
-                    e += cm.log_rowclone()[1]
+                    e += cm.log_rowclone()[mi]
                 else:
-                    e += cm.log_write()[1] + cm.io_adjustment(1)[1]
+                    e += cm.log_write()[mi] + cm.io_adjustment(1)[mi]
             elif depth > 0 and q not in seen \
                     and (q in self.val or q in self.neg):
                 sub = self._dup_energy(q, demorgan, depth - 1,
                                        seen | {q})
                 if sub is None:
                     return None
-                e += sub + cm.log_rowclone()[1]
+                e += sub + cm.log_rowclone()[mi]
             else:
                 return None                  # operand gone: can't duplicate
         n = len(pi.srcs)
-        e += (n - 1) * cm.log_rowclone()[1] + cm.log_frac()[1] \
-            + cm.log_apa(2 * n)[1]
+        e += (n - 1) * cm.log_rowclone()[mi] + cm.log_frac()[mi] \
+            + cm.log_apa(2 * n)[mi]
         return e
 
     def _spill_energy(self) -> float:
-        """Log-exact energy of the spill alternative: one host RD now +
-        one WR to re-stage (park or direct write), both crossing the
-        off-chip bus."""
-        cm = self.isa.cost_model
-        return cm.log_read()[1] + cm.log_write()[1] + cm.io_adjustment(2)[1]
+        """Log-exact cost of the spill alternative (same metric as
+        :meth:`_dup_energy`): one host RD now + one WR to re-stage (park
+        or direct write), both crossing the off-chip bus."""
+        cm, mi = self.isa.cost_model, self._mi
+        return cm.log_read()[mi] + cm.log_write()[mi] \
+            + cm.io_adjustment(2)[mi]
 
     def _try_duplicate(self, s: int, need_neg: bool) -> bool:
         """Plan a dual-form duplicate of ``s``'s producer so the needed
@@ -1092,6 +1104,7 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
                       carry: dict | None = None,
                       pins: dict | None = None, pin_inputs: bool = False,
                       duplicate: bool | None = None,
+                      objective: str = "energy",
                       verify: bool | None = None,
                       _fixed: tuple | None = None) -> ResidentPlan:
     """Compile-time polarity/residency scheduling pre-pass.
@@ -1126,6 +1139,17 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
     off-chip IO included), and a whole-plan guard falls back to the spill
     schedule if duplication somehow cost more, so a scheduled plan's cost
     provably never exceeds its spill alternative's.
+
+    ``objective`` selects which of the log-exact (time_ns, energy_pj)
+    twins the duplication gates and the whole-plan guard compare:
+    ``"energy"`` (the default — bit-identical plans to every release
+    before the knob existed) or ``"latency"``, which adjudicates
+    dup-vs-spill on per-bank serial nanoseconds instead.  Latency here
+    is the *serial* plan time (``Program.cost(plan=...).time_ns``): the
+    dup/spill alternatives execute on one bank, where serial time is
+    exact; rank-level arbitration costs are a property of the whole
+    array and are priced separately by
+    :func:`repro.analysis.schedule_bank_array`.
 
     ``carry`` seeds the planner's in-bank constant-row cache and
     ``pins``/``pin_inputs`` carry pinned *input-word* rows (cross-block
@@ -1166,6 +1190,7 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
         raise ValueError(f"unknown resident policy {policy!r}")
     if duplicate is None:
         duplicate = policy == "scheduled"
+    mi = metric_index(objective)     # validates the objective up front
 
     def verified(pl: ResidentPlan) -> ResidentPlan:
         # static verification of the final plan only (search attempts
@@ -1182,7 +1207,8 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
 
     if policy == "greedy":
         return verified(_ResidentPlanner(prog, isa, carry=carry, pins=pins,
-                                         pin_inputs=pin_inputs)
+                                         pin_inputs=pin_inputs,
+                                         objective=objective)
                         .plan("greedy"))
 
     cursor0 = dict(isa._pair_cursor)
@@ -1194,22 +1220,25 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
         return _ResidentPlanner(prog, isa, order=order, forced=forced,
                                 future=future, carry=carry, pins=pins,
                                 pin_inputs=pin_inputs, duplicate=dup,
-                                dup_hints=hints).plan("scheduled")
+                                dup_hints=hints,
+                                objective=objective).plan("scheduled")
 
     def key(pl: ResidentPlan):
         return (pl.polarity_spills, pl.rowclones, pl.writes, pl.reads)
 
     def steady_energy(pl: ResidentPlan) -> float:
-        """Session steady-state energy: pinned-input parks repay across
-        blocks (block k >= 2 clones the pinned row instead of paying the
-        bus write), so they are discounted to one RowClone each."""
+        """Session steady-state cost in the objective metric: pinned-
+        input parks repay across blocks (block k >= 2 clones the pinned
+        row instead of paying the bus write), so they are discounted to
+        one RowClone each."""
+        base = pl.cost().metric(objective)
         if not pin_inputs:
-            return pl.cost().energy_pj
+            return base
         cm = CostModel(pl.module, row_bits=pl.row_bits)
         n_pin = sum(len(locs) for locs in pl.pins.values())
-        saving = (cm.log_write()[1] + cm.io_adjustment(1)[1]
-                  - cm.log_rowclone()[1])
-        return pl.cost().energy_pj - n_pin * max(saving, 0.0)
+        saving = (cm.log_write()[mi] + cm.io_adjustment(1)[mi]
+                  - cm.log_rowclone()[mi])
+        return base - n_pin * max(saving, 0.0)
 
     def belady(pl: ResidentPlan, dup, h) -> ResidentPlan:
         # Belady allocation pass: decisions fixed, future activations
@@ -1233,7 +1262,8 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
 
     cache_key = None
     if _fixed is None:
-        cache_key = _sched_cache_key(prog, isa) + (duplicate, pin_inputs)
+        cache_key = _sched_cache_key(prog, isa) + (duplicate, pin_inputs,
+                                                   objective)
         _fixed = _SCHED_CACHE.get(cache_key)
     if _fixed is not None:
         # frozen decisions (sessions / cached search results): the
@@ -1319,7 +1349,8 @@ def schedule_resident(prog: Program, isa: PudIsa, *,
 
 def shared_schedule_decisions(prog: Program, isa: PudIsa, *,
                               pin_inputs: bool = False,
-                              duplicate: bool | None = None) -> tuple:
+                              duplicate: bool | None = None,
+                              objective: str = "energy") -> tuple:
     """The frozen ``(order, forms, dup_hints, dup_enabled)`` scheduler
     decisions of one ISA, for replay on *sibling banks* of a BankArray.
 
@@ -1332,7 +1363,8 @@ def shared_schedule_decisions(prog: Program, isa: PudIsa, *,
     ``ResidentSession(fixed=...)`` — two cheap planner passes per bank
     instead of the ~0.5 s search per bank."""
     plan = schedule_resident(prog, isa, policy="scheduled",
-                             pin_inputs=pin_inputs, duplicate=duplicate)
+                             pin_inputs=pin_inputs, duplicate=duplicate,
+                             objective=objective)
     return (plan.order, dict(plan.demorgan), dict(plan.dup_hints),
             plan.dup_enabled)
 
@@ -1469,6 +1501,7 @@ class ResidentSession:
     def __init__(self, prog: Program, isa: PudIsa, *,
                  policy: str = "greedy", pin_inputs: bool | None = None,
                  duplicate: bool | None = None, fixed: tuple | None = None,
+                 objective: str = "energy",
                  verify: bool | None = None):
         self.prog, self.isa = prog, isa
         self.policy = "scheduled" if policy is True else policy
@@ -1476,6 +1509,8 @@ class ResidentSession:
                            if pin_inputs is None else pin_inputs)
         #: spill-placement ablation knob (None = the policy default)
         self.duplicate = duplicate
+        #: dup-vs-spill gate metric (see ``isa.OBJECTIVES``)
+        self.objective = objective
         #: static plan verification tri-state (None = default_verify())
         self.verify = verify
         self._carry: dict | None = None
@@ -1499,6 +1534,7 @@ class ResidentSession:
                                  carry=self._carry, pins=pins or None,
                                  pin_inputs=self.pin_inputs,
                                  duplicate=self.duplicate,
+                                 objective=self.objective,
                                  verify=self.verify, _fixed=self._fixed)
         out = _ResidentExec(plan, self.prog, inputs, self.isa).run()
         self._carry = plan.carry

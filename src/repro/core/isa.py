@@ -106,6 +106,22 @@ def inventory_for(module: ModuleConfig, seed: int = 0) -> PairInventory:
 # ---------------------------------------------------------------------------
 # Cost model
 # ---------------------------------------------------------------------------
+#: plan-search objectives: what the scheduler's dup-vs-spill gates
+#: minimize.  ``energy`` (the default) gates on pJ, ``latency`` on the
+#: per-bank serial ns of the same log-exact command constants.
+OBJECTIVES = ("energy", "latency")
+
+
+def metric_index(objective: str) -> int:
+    """Index of one objective's metric in the ``log_*`` (time, energy)
+    twin tuples: 0 picks ``time_ns`` for ``latency``, 1 ``energy_pj``
+    for ``energy``."""
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {OBJECTIVES}")
+    return 0 if objective == "latency" else 1
+
+
 @dataclass
 class OpCost:
     time_ns: float = 0.0
@@ -120,6 +136,11 @@ class OpCost:
     def scaled(self, k: float) -> "OpCost":
         return OpCost(self.time_ns * k, self.energy_pj * k,
                       int(self.commands * k), int(self.bus_bytes * k))
+
+    def metric(self, objective: str = "energy") -> float:
+        """This cost's scalar under one plan-search objective."""
+        return self.time_ns if metric_index(objective) == 0 \
+            else self.energy_pj
 
 
 class CostModel:

@@ -151,6 +151,14 @@ class OffloadReport:
     staged_bytes: int = 0
     #: per-bank measured sub-reports (dram backend): bank index -> report
     banks: dict = field(default_factory=dict)
+    #: rank-level timing (array level only, dram backend; stamped by
+    #: :meth:`PudEngine.schedule_timing`): the optimistic
+    #: independent-bank makespan next to the rank-legal one, with the
+    #: legality cost split into cross-bank arbitration and refresh
+    makespan_ns: float = 0.0
+    legal_makespan_ns: float = 0.0
+    rank_stall_ns: float = 0.0
+    refresh_stall_ns: float = 0.0
 
     def bank(self, b: int) -> "OffloadReport":
         """The (auto-created) measured sub-report of one bank."""
@@ -198,6 +206,10 @@ class OffloadReport:
             "bus_bytes_avoided": self.bus_bytes_avoided,
             "rowclones": self.rowclones,
             "staged_bytes": self.staged_bytes,
+            "makespan_ns": self.makespan_ns,
+            "legal_makespan_ns": self.legal_makespan_ns,
+            "rank_stall_ns": self.rank_stall_ns,
+            "refresh_stall_ns": self.refresh_stall_ns,
         }
 
 
@@ -499,6 +511,27 @@ class PudEngine:
         if self.backend == "pallas":
             return kops.bitcount_planes(planes)
         return kops.ref.bitcount_planes(planes)
+
+    # ------------- rank-level timing -------------
+    def schedule_timing(self):
+        """Rank-legal schedule of everything this engine has executed.
+
+        Runs the :mod:`repro.analysis.schedule` event-driven scheduler
+        over the dram backend's accumulated BankArray command logs and
+        stamps the resulting makespans/stalls onto :attr:`report` (so
+        ``report.summary()`` carries both timing models).  Returns the
+        :class:`~repro.analysis.ScheduledTimeline`; raises on non-dram
+        backends (no command logs to schedule)."""
+        if self._array is None:
+            raise RuntimeError("schedule_timing() needs the dram backend"
+                               " (no command logs on jnp/pallas)")
+        from repro import analysis
+        tl = analysis.schedule_bank_array(self._array)
+        self.report.makespan_ns = float(self._array.makespan_ns())
+        self.report.legal_makespan_ns = tl.legal_makespan_ns
+        self.report.rank_stall_ns = tl.rank_stall_ns
+        self.report.refresh_stall_ns = tl.refresh_stall_ns
+        return tl
 
     # ------------- compiled Boolean programs -------------
     def run_program(self, prog: CC.Program,

@@ -1,0 +1,125 @@
+"""The benchmark snapshot diff gate (``benchmarks/diff_bench.py``).
+
+The diff is CI's only guard against silent regression between PR
+snapshots, so its three key classes each get direct tests: success
+rates (point tolerance), deterministic counters (exact, fail on
+increase), and modeled DRAM times (relative tolerance, with throughput
+keys gated in the decrease direction).  The missing-baseline-key gate —
+a vanished metric must fail, not read as "no regression" — is the
+satellite regression test.
+"""
+import importlib.util
+import pathlib
+
+import pytest
+
+_PATH = (pathlib.Path(__file__).resolve().parent.parent
+         / "benchmarks" / "diff_bench.py")
+_spec = importlib.util.spec_from_file_location("diff_bench", _PATH)
+DB = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(DB)
+
+
+def _snap(succ=0.5, spills=0, legal=1000.0, ops=10.0, acts=48,
+          violations=0, **extra):
+    s = {
+        "charz_speedup_detail": {
+            "and2": {"batched_success": succ}},
+        "resident_v2_detail": {
+            "add4": {"scheduled_spills": spills}},
+        "static_detail": {
+            "legal_makespan_ns_loop": legal,
+            "sched_violations_loop": violations},
+        "roofline_detail": {
+            "acts_b4": acts,
+            "sched_violations_b4": violations,
+            "legal_makespan_ns_b4": legal,
+            "ops_per_us_legal_b4": ops,
+            "gate_failures": 0},
+    }
+    s.update(extra)
+    return s
+
+
+def test_identical_snapshots_pass(capsys):
+    assert DB.diff(_snap(), _snap(), tol_pts=2.0) == []
+
+
+def test_success_regression_beyond_tol_fails():
+    msgs = DB.diff(_snap(succ=0.45), _snap(succ=0.50), tol_pts=2.0)
+    assert any("regressed" in m for m in msgs)
+    assert DB.diff(_snap(succ=0.495), _snap(succ=0.50), tol_pts=2.0) == []
+
+
+def test_counter_increase_fails_decrease_passes():
+    assert any("increased" in m for m in
+               DB.diff(_snap(spills=1), _snap(spills=0), tol_pts=2.0))
+    assert DB.diff(_snap(spills=0), _snap(spills=1), tol_pts=2.0) == []
+
+
+def test_sched_violation_counters_are_exact_gates():
+    msgs = DB.diff(_snap(violations=1), _snap(violations=0), tol_pts=2.0)
+    assert sum("increased" in m for m in msgs) >= 2   # static + roofline
+
+
+def test_modeled_time_gated_with_relative_tolerance():
+    # +10% legal makespan: scheduler regression
+    msgs = DB.diff(_snap(legal=1100.0), _snap(legal=1000.0),
+                   tol_pts=2.0, rtol=0.005)
+    assert any("worsened" in m for m in msgs)
+    # within rtol: passes
+    assert DB.diff(_snap(legal=1004.0), _snap(legal=1000.0),
+                   tol_pts=2.0, rtol=0.005) == []
+    # a *decrease* is an improvement, never a failure
+    assert DB.diff(_snap(legal=900.0), _snap(legal=1000.0),
+                   tol_pts=2.0, rtol=0.005) == []
+
+
+def test_throughput_keys_gate_the_decrease_direction():
+    msgs = DB.diff(_snap(ops=8.0), _snap(ops=10.0),
+                   tol_pts=2.0, rtol=0.005)
+    assert any("ops_per_us" in m and "worsened" in m for m in msgs)
+    assert DB.diff(_snap(ops=12.0), _snap(ops=10.0),
+                   tol_pts=2.0, rtol=0.005) == []
+
+
+def test_missing_baseline_keys_fail_every_class():
+    """A metric that silently vanishes from the new snapshot must fail
+    the diff — success, counter and timing keys alike."""
+    base = _snap()
+    for section, key in (
+            ("charz_speedup_detail", None),
+            ("resident_v2_detail", None),
+            ("roofline_detail", "acts_b4"),
+            ("roofline_detail", "ops_per_us_legal_b4")):
+        new = _snap()
+        if key is None:
+            new[section] = {}
+        else:
+            del new[section][key]
+        msgs = DB.diff(new, base, tol_pts=2.0)
+        assert any("missing from the new snapshot" in m for m in msgs), \
+            (section, key)
+
+
+def test_new_keys_without_baseline_are_reported_not_failed(capsys):
+    new = _snap()
+    new["roofline_detail"]["acts_b8"] = 96
+    assert DB.diff(new, _snap(), tol_pts=2.0) == []
+    assert "new metrics (no baseline)" in capsys.readouterr().out
+
+
+def test_real_snapshots_overlap():
+    """The committed PR-9 snapshot must diff cleanly against itself and
+    carry the new scheduler keys."""
+    import json
+    root = _PATH.parent.parent
+    with open(root / "BENCH_pr9.json") as f:
+        snap = json.load(f)
+    assert DB.diff(snap, snap, tol_pts=0.0, rtol=0.0) == []
+    ck = DB._counter_keys(snap)
+    assert ck.get("static.sched_violations_loop") == 0.0
+    assert ck.get("roofline.gate_failures") == 0.0
+    tk = DB._timing_keys(snap)
+    assert "static.legal_makespan_ns_loop" in tk
+    assert "roofline.legal_makespan_ns_b16" in tk

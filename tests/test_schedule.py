@@ -1,0 +1,261 @@
+"""Rank-legal command scheduler (``repro.analysis.schedule``) + the
+latency plan objective it motivates.
+
+* deterministic units: single-bank streams schedule back-to-back with
+  no stalls; ``count > 1`` events repeat into identical rigid blocks;
+  intra-command primitive offsets are never stretched,
+* refresh: streams longer than tREFI get REF windows that block the
+  rank for tRFC each (deferred-refresh model),
+* contention: identical multi-bank streams pay tRRD/tFAW rank stalls
+  and the legal makespan grows past the optimistic one,
+* property (hypothesis; the in-repo stub keeps it collectable without
+  it): for random per-bank command mixes the schedule re-lints to zero
+  violations, dominates both lower bounds, and preserves per-bank
+  serial order without overlap,
+* stack wiring: ``BankArray.legal_makespan_ns`` and
+  ``PudEngine.schedule_timing`` surface the same timeline,
+* plan objective: ``schedule_resident(objective=...)`` validates the
+  objective, defaults to energy bit-identically, and produces clean
+  latency plans.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import analysis
+from repro.analysis.schedule import (command_blocks, schedule_blocks,
+                                     schedule_bank_array)
+from repro.core import charz
+from repro.core import compiler as CC
+from repro.core.bankarray import BankArray
+from repro.core.device import (VIOLATED_TRAS_NS, VIOLATED_TRP_NS,
+                               get_module, timings_for)
+from repro.core.isa import OBJECTIVES, OpCost, PudIsa, metric_index
+from repro.core.policy import ResidentPolicy
+from repro.core.simulator import BankSim, CommandLog
+
+
+def _T():
+    return timings_for(get_module())
+
+
+def _cmd_durations(t):
+    """The simulator's logged per-command occupancies (simulator.py)."""
+    return {
+        "WR": t.tRCD + t.tWR + t.tRP,
+        "RD": t.tRCD + t.tCL + t.tRP,
+        "FRAC": 2 * (VIOLATED_TRAS_NS + t.tRP),
+        "RC": t.tRAS + VIOLATED_TRP_NS + t.tRAS + t.tRP,
+        "APA": VIOLATED_TRAS_NS + VIOLATED_TRP_NS + t.tRAS + t.tRP,
+    }
+
+
+def _log_of(cmds, t, bank=0, count=1):
+    log = CommandLog()
+    dur = _cmd_durations(t)
+    for c in cmds:
+        log.add(c, dur[c], 1.0, count, bank=bank)
+    return log
+
+
+# ---------------------------------------------------------------------------
+# deterministic units
+# ---------------------------------------------------------------------------
+def test_single_bank_schedules_serially():
+    t = _T()
+    cmds = ["WR", "WR", "APA", "RD"]
+    blocks = command_blocks(_log_of(cmds, t), t)
+    tl = schedule_blocks({0: blocks}, t)
+    serial = sum(b.dur for b in blocks)
+    assert tl.legal_makespan_ns == pytest.approx(serial)
+    assert tl.rank_stall_ns == 0.0 and tl.refresh_stall_ns == 0.0
+    assert tl.refreshes == 0 and tl.relint_violations == 0
+    starts = [c.start for c in tl.commands]
+    assert starts == sorted(starts)
+    assert starts[0] == 0.0
+    assert tl.commands[1].start == pytest.approx(blocks[0].dur)
+
+
+def test_command_blocks_repeat_counted_events():
+    t = _T()
+    blocks = command_blocks(_log_of(["APA"], t, count=3), t)
+    assert len(blocks) == 3
+    assert len({(b.cmd, b.dur, b.prims) for b in blocks}) == 1
+    assert blocks[0].act_offs and blocks[0].cmd == "APA"
+
+
+def test_blocks_are_rigid_intra_offsets_preserved():
+    t = _T()
+    blocks = command_blocks(_log_of(["APA"] * 4, t, bank=1), t, bank=1)
+    tl = schedule_blocks({0: blocks, 1: blocks}, t)
+    for sc in tl.commands:
+        offs = [p.t - sc.start for p in sc.primitives()]
+        want = [p[0] for p in sc.block.prims]
+        assert offs == pytest.approx(want)
+
+
+def test_refresh_windows_injected_past_trefi():
+    t = _T()
+    dur = _cmd_durations(t)["WR"]
+    n = int(2.5 * t.tREFI / dur) + 1            # serial spans ~2.5 tREFI
+    tl = schedule_blocks(
+        {0: command_blocks(_log_of(["WR"], t, count=n), t)}, t)
+    serial = n * dur
+    assert tl.refreshes >= 2
+    assert tl.refresh_stall_ns > 0.0
+    # single bank: every REF window stalls the serial stream fully
+    assert tl.legal_makespan_ns == pytest.approx(
+        serial + tl.refreshes * t.tRFC)
+    assert tl.relint_violations == 0
+
+
+def test_cross_bank_contention_pays_rank_stall():
+    t = _T()
+    per_bank = {b: command_blocks(_log_of(["APA"] * 6, t, bank=b), t,
+                                  bank=b)
+                for b in range(4)}
+    tl = schedule_blocks(per_bank, t)
+    serial = max(sum(b.dur for b in bls) for bls in per_bank.values())
+    assert tl.rank_stall_ns > 0.0
+    assert tl.legal_makespan_ns > serial
+    assert tl.legal_makespan_ns >= tl.min_legal_makespan_ns - 1e-9
+    assert tl.relint_violations == 0
+    assert tl.legality_overhead_pct > 0.0
+
+
+def test_empty_schedule_is_trivial():
+    t = _T()
+    tl = schedule_blocks({}, t)
+    assert tl.legal_makespan_ns == 0.0
+    assert tl.relint_violations == 0 and not tl.commands
+
+
+# ---------------------------------------------------------------------------
+# property: random per-bank mixes
+# ---------------------------------------------------------------------------
+@st.composite
+def bank_mixes(draw):
+    n_banks = draw(st.integers(min_value=1, max_value=4))
+    return {b: draw(st.lists(
+        st.sampled_from(["WR", "RD", "RC", "FRAC", "APA"]),
+        min_size=1, max_size=12)) for b in range(n_banks)}
+
+
+@given(mixes=bank_mixes())
+@settings(max_examples=25, deadline=None)
+def test_schedule_property_legal_and_ordered(mixes):
+    t = _T()
+    per_bank = {b: command_blocks(_log_of(cmds, t, bank=b), t, bank=b)
+                for b, cmds in mixes.items()}
+    tl = schedule_blocks(per_bank, t)
+    serial = max(sum(bl.dur for bl in bls) for bls in per_bank.values())
+    assert tl.relint_violations == 0
+    assert tl.legal_makespan_ns >= max(
+        serial, analysis.act_rate_bound(tl.n_acts, t)) - 1e-6
+    assert tl.min_legal_makespan_ns == pytest.approx(
+        max(serial, analysis.act_rate_bound(tl.n_acts, t)))
+    for b, cmds in mixes.items():
+        sched = [c for c in tl.commands if c.block.bank == b]
+        assert [c.block.cmd for c in sched] == cmds     # serial order
+        for prev, nxt in zip(sched, sched[1:]):
+            assert nxt.start >= prev.end - 1e-9         # no overlap
+
+
+# ---------------------------------------------------------------------------
+# stack wiring: BankArray / engine
+# ---------------------------------------------------------------------------
+def _xor_array(banks=4):
+    arr = BankArray(get_module(), banks=banks, seed=0,
+                    error_model="ideal")
+    prog = charz.get_program("xor")
+    rng = np.random.default_rng(2)
+    for b in range(arr.banks):
+        isa = arr.isa(b)
+        ins = {n: rng.integers(0, 2, (isa.width,)).astype(np.uint8)
+               for n in ("a", "b")}
+        CC.run_sim(prog, ins, isa, resident=ResidentPolicy.SCHEDULED)
+    return arr
+
+
+def test_schedule_bank_array_dominates_optimistic_makespan():
+    arr = _xor_array()
+    tl = schedule_bank_array(arr)
+    assert tl.relint_violations == 0
+    assert tl.legal_makespan_ns >= max(
+        float(arr.makespan_ns()), tl.min_legal_makespan_ns) - 1e-6
+    assert tl.rank_stall_ns > 0.0               # banks collide at t=0
+    assert arr.legal_makespan_ns() == pytest.approx(tl.legal_makespan_ns)
+
+
+def test_engine_schedule_timing_stamps_report():
+    import jax.numpy as jnp
+    from repro.pud.engine import PudEngine
+    eng = PudEngine("dram", banks=2, resident=ResidentPolicy.SCHEDULED,
+                    verify=False)
+    rng = np.random.default_rng(7)
+    prog = charz.get_program("xor")
+    ins = {k: jnp.asarray(np.asarray(rng.integers(
+        0, 2**32, (4, 4), dtype=np.uint32))) for k in ("a", "b")}
+    eng.run_program(prog, ins)
+    tl = eng.schedule_timing()
+    rep = eng.report
+    assert rep.legal_makespan_ns == pytest.approx(tl.legal_makespan_ns)
+    assert rep.makespan_ns > 0.0
+    assert rep.legal_makespan_ns >= rep.makespan_ns - 1e-6
+    s = rep.summary()
+    for key in ("makespan_ns", "legal_makespan_ns", "rank_stall_ns",
+                "refresh_stall_ns"):
+        assert key in s
+
+
+def test_engine_schedule_timing_requires_dram_backend():
+    from repro.pud.engine import PudEngine
+    with pytest.raises(RuntimeError):
+        PudEngine("jnp").schedule_timing()
+
+
+# ---------------------------------------------------------------------------
+# latency as a plan objective
+# ---------------------------------------------------------------------------
+def test_metric_index_and_opcost_metric():
+    assert OBJECTIVES == ("energy", "latency")
+    assert metric_index("latency") == 0 and metric_index("energy") == 1
+    with pytest.raises(ValueError):
+        metric_index("watts")
+    c = OpCost(time_ns=3.0, energy_pj=7.0)
+    assert c.metric() == 7.0
+    assert c.metric("energy") == 7.0
+    assert c.metric("latency") == 3.0
+
+
+def _fresh_isa():
+    return PudIsa(BankSim(row_bits=128, error_model="ideal", seed=11))
+
+
+@pytest.mark.parametrize("name", ("xor", "maj3", "add4"))
+def test_objective_energy_default_is_bit_identical(name):
+    prog = charz.get_program(name)
+    base = CC.schedule_resident(prog, _fresh_isa(), policy="scheduled")
+    ener = CC.schedule_resident(prog, _fresh_isa(), policy="scheduled",
+                                objective="energy")
+    assert ener.polarity_spills == base.polarity_spills
+    assert ener.duplications == base.duplications
+    assert ener.cost().energy_pj == pytest.approx(base.cost().energy_pj)
+    assert [(s.kind, s.exec_op, s.rf, s.rl, s.pre) for s in ener.steps] \
+        == [(s.kind, s.exec_op, s.rf, s.rl, s.pre) for s in base.steps]
+
+
+@pytest.mark.parametrize("name", ("xor", "add4"))
+def test_objective_latency_plans_verify_clean(name):
+    prog = charz.get_program(name)
+    plan = CC.schedule_resident(prog, _fresh_isa(), policy="scheduled",
+                                objective="latency")
+    assert analysis.verify_plan(prog, plan) == []
+    assert plan.cost().time_ns > 0.0
+
+
+def test_objective_unknown_rejected_up_front():
+    prog = charz.get_program("xor")
+    with pytest.raises(ValueError, match="objective"):
+        CC.schedule_resident(prog, _fresh_isa(), objective="watts")

@@ -1,6 +1,6 @@
 """Static-analysis CI gate: plan verifier + DDR4 timing linter.
 
-Two exact gates, both must hold for every configuration:
+Three exact gates, all must hold for every configuration:
 
 * **Plan verification** — every program in the characterization zoo
   (``charz.PROGRAMS``) scheduled under every resident policy
@@ -14,6 +14,12 @@ Two exact gates, both must hold for every configuration:
   zero DDR4 timing violations (``ArrayTimingReport.violations == 0``).
   Deliberately-violated gaps (APA/Frac/RowClone) are classified
   ``by_design`` and reported, not counted.
+* **Rank schedule** — the same logs run through the event-driven
+  rank scheduler (:func:`repro.analysis.schedule_bank_array`); the
+  scheduled stream must re-lint to zero violations
+  (``ScheduledTimeline.relint_violations == 0``) and its legal
+  makespan must dominate both the optimistic per-bank makespan and
+  the ACT-rate lower bound.
 
 Run from the repository root:  PYTHONPATH=src python tools/lint_plans.py
 Exit status 1 on any finding/violation — the CI static-analysis gate.
@@ -97,6 +103,24 @@ def lint_engine_logs() -> int:
             for rule, n in sorted(rep.violations.items()):
                 print(f"FAIL  timing/{label} bank {bank}: {rule} x{n}")
         n_violations += report.violations
+
+        # rank schedule: the legal timeline must re-lint clean and its
+        # makespan must dominate both lower bounds
+        tl = analysis.schedule_bank_array(eng._array)
+        bound = max(tl.serial_makespan_ns, tl.min_legal_makespan_ns)
+        bad_sched = tl.relint_violations
+        if tl.legal_makespan_ns < bound - 1e-6:
+            bad_sched += 1
+            print(f"FAIL  sched/{label}: legal makespan "
+                  f"{tl.legal_makespan_ns:.1f} ns below bound "
+                  f"{bound:.1f} ns")
+        print(f"{'FAIL' if bad_sched else 'ok  '}  "
+              f"sched/{label}: {tl.relint_violations} post-schedule "
+              f"violations, legal {tl.legal_makespan_ns:.0f} ns vs "
+              f"optimistic {tl.serial_makespan_ns:.0f} ns "
+              f"(+{tl.legality_overhead_pct:.2f}%, "
+              f"{tl.refreshes} refreshes)")
+        n_violations += bad_sched
     return n_violations
 
 
@@ -105,7 +129,8 @@ def main() -> int:
     n_violations = lint_engine_logs()
     bad = n_findings + n_violations
     print(f"lint_plans: {n_findings} plan findings, "
-          f"{n_violations} timing violations: {'FAIL' if bad else 'ok'}")
+          f"{n_violations} timing/schedule violations: "
+          f"{'FAIL' if bad else 'ok'}")
     return 1 if bad else 0
 
 
