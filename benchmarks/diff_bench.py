@@ -33,6 +33,15 @@ The PR-9 scheduler counters join the exact gates:
 re-linting to 0), ``roofline.acts_b{N}`` (the command mix is
 deterministic) and ``roofline.gate_failures``.
 
+The PR-10 workload keys: ``workloads.*.mc_success`` /
+``workloads.*.lane_accuracy`` join the success-rate gates (the bloom
+probe/insert fan-in sweep and the noisy bit-serial dot curve), while
+``workloads.bloom_insert.host_bytes_scheduled`` (in-DRAM host bytes of
+the streamed bloom insert must never regain bytes over the committed
+plan), the golden-parity counters (``parity_mismatch_bits``,
+``probe_mismatch_keys``, ``dot_parity.*mismatch_lanes`` — all 0 in the
+baseline) and ``workloads.gate_failures`` are gated exactly.
+
 Usage:
     python -m benchmarks.diff_bench NEW.json [BASELINE.json] [--tol 2.0]
                                     [--rtol 0.005]
@@ -65,7 +74,9 @@ def _success_keys(snap: dict) -> dict[str, float]:
             ("bankarray_detail", "bankarray",
              ("success_b1", "success_b16")),
             ("fused_detail", "fused",
-             ("loop_success", "fused_success"))):
+             ("loop_success", "fused_success")),
+            ("workloads_detail", "workloads",
+             ("mc_success", "estimate", "lane_accuracy"))):
         for name, d in snap.get(section, {}).items():
             if not isinstance(d, dict):   # section-level scalar counters
                 continue
@@ -102,6 +113,20 @@ def _counter_keys(snap: dict) -> dict[str, float]:
         if kind.startswith(("acts_b", "sched_violations_b")) \
                 or kind == "gate_failures":
             out[f"roofline.{kind}"] = float(val)
+    wl = snap.get("workloads_detail", {})
+    for kind in ("host_bytes_scheduled", "parity_mismatch_bits",
+                 "probe_mismatch_keys"):
+        if kind in wl.get("bloom_insert", {}):
+            out[f"workloads.bloom_insert.{kind}"] = \
+                float(wl["bloom_insert"][kind])
+    for kind in ("mismatch_lanes", "tree_mismatch_lanes",
+                 "host_bytes_moved"):
+        if kind in wl.get("dot_parity", {}):
+            out[f"workloads.dot_parity.{kind}"] = \
+                float(wl["dot_parity"][kind])
+    if "workloads_gate_failures" in snap:
+        out["workloads.gate_failures"] = \
+            float(snap["workloads_gate_failures"])
     return out
 
 

@@ -1099,13 +1099,154 @@ def roofline(fast=False):
     return bad
 
 
+def workloads_bench(fast=False):
+    """Real workloads on the substrate: bloom dedup + bit-serial dot.
+
+    Four measurements, the PR-10 acceptance quantities:
+
+    * **bloom insert bytes** — a batch-streamed bloom insert on the
+      2-bank dram engine: in-DRAM host bytes moved under the scheduled
+      resident policy must undercut both the host-staged reference
+      policy and the processor-centric CPU baseline,
+    * **golden parity** — dram bloom plane/probe bit-identical to jnp,
+      dram bit-serial dot equal to the popcount-GEMM kernel (exact
+      counters, 0 in the baseline),
+    * **accuracy vs success rate** — the noisy bit-serial dot across
+      temperatures: whole-program MC success and exact-lane workload
+      accuracy next to the composed per-op estimate (the
+      ``reliability.plan`` contract as a curve),
+    * **fan-in sweep** — bloom probe/insert program success vs fan-in
+      (paper SS5's many-input AND/OR at workload fan-ins).
+    """
+    from repro.core import charz
+    from repro.core import compiler as CC
+    from repro.core.isa import PudIsa
+    from repro.core.policy import ResidentPolicy
+    from repro.core.simulator import BankSim
+    from repro.kernels import ops as kops
+    from repro.pud import workloads as W
+    from repro.pud.bloom import PudBloomFilter
+    from repro.pud.engine import PudEngine
+
+    detail = {}
+    bad = 0
+    rng = np.random.default_rng(10)
+
+    # --- bloom insert: bytes moved + plane/probe parity ---
+    keys = rng.integers(0, 2 ** 60, 512).astype(np.uint64)
+    probe = np.arange(1024, dtype=np.uint64)
+    filters = {}
+    for label, pol in (("scheduled", None),
+                       ("host_staged", ResidentPolicy.HOST)):
+        eng = PudEngine("dram", noisy=False, banks=2, resident=pol)
+        bf = PudBloomFilter(m_bits=1 << 15, n_hashes=4, engine=eng)
+        for lo in range(0, 512, 128):       # 4 streamed insert batches
+            bf.insert(keys[lo:lo + 128])
+        filters[label] = bf
+    bf_j = PudBloomFilter(m_bits=1 << 15, n_hashes=4)
+    for lo in range(0, 512, 128):
+        bf_j.insert(keys[lo:lo + 128])
+    bf_d = filters["scheduled"]
+    plane_mismatch = int((np.asarray(kops.unpack_bits(bf_d.plane))
+                          != np.asarray(kops.unpack_bits(bf_j.plane))).sum())
+    probe_mismatch = int((bf_d.probe(probe) != bf_j.probe(probe)).sum())
+    sched_b = filters["scheduled"].engine.report.host_bytes_moved
+    host_b = filters["host_staged"].engine.report.host_bytes_moved
+    cpu_b = filters["scheduled"].engine.report.cpu.bus_bytes
+    detail["bloom_insert"] = {
+        "host_bytes_scheduled": sched_b,
+        "host_bytes_host_staged": host_b,
+        "cpu_baseline_bytes": cpu_b,
+        "parity_mismatch_bits": plane_mismatch,
+        "probe_mismatch_keys": probe_mismatch,
+    }
+    if not (sched_b < host_b and sched_b < cpu_b):
+        bad += 1
+    bad += int(plane_mismatch > 0) + int(probe_mismatch > 0)
+
+    # --- bit-serial dot: golden parity on the dram engine ---
+    x = rng.integers(0, 2, (8, 8), dtype=np.uint8)
+    w = rng.integers(0, 2, (8, 8), dtype=np.uint8)
+    eng = PudEngine("dram", noisy=False, banks=2)
+    got = W.dot_bitserial(x, w, eng)
+    ref = np.asarray(kops.popcount_gemm_bits(x, w))
+    tree, _arr = W.dot_bitserial_tree(x, w, banks=2, row_bits=2048)
+    detail["dot_parity"] = {
+        "mismatch_lanes": int((got != ref).sum()),
+        "tree_mismatch_lanes": int((tree != ref).sum()),
+        "host_bytes_moved": eng.report.host_bytes_moved,
+        "cpu_baseline_bytes": eng.report.cpu.bus_bytes,
+    }
+    bad += int((got != ref).any()) + int((tree != ref).any())
+
+    # --- accuracy vs success rate: noisy dot across temperatures ---
+    prog = charz.get_program("dot_bitserial8")
+    a, b = W.dot_lane_planes(x, w)
+    k, lanes = a.shape
+    ref_flat = ref.reshape(-1)
+    tr = 24 if fast else 48
+    rows = []
+    for temp in ((50.0, 85.0) if fast else (50.0, 70.0, 85.0)):
+        est = float(charz.program_success_estimate("dot_bitserial8",
+                                                   temp_c=temp))
+        mc = float(charz.mc_program_success(
+            prog, trials=tr, temp_c=temp, seed=0,
+            resident=ResidentPolicy.SCHEDULED))
+        # workload accuracy: exact-count lanes of the real x/w planes
+        t_acc = 16
+        isa = PudIsa(BankSim(row_bits=2048, error_model="analog",
+                             temp_c=temp, seed=1, trials=t_acc,
+                             track_unshared=False))
+        pad = isa.width - lanes
+        ins = {}
+        for i in range(k):
+            ins[f"a{i}"] = np.tile(np.pad(a[i], (0, pad)), (t_acc, 1))
+            ins[f"b{i}"] = np.tile(np.pad(b[i], (0, pad)), (t_acc, 1))
+        out = CC.run_sim(prog, ins, isa, trials=t_acc,
+                         resident=ResidentPolicy.SCHEDULED)
+        cnt = sum(np.asarray(out[f"c{i}"], dtype=np.int64)[:, :lanes] << i
+                  for i in range(len(out)))
+        acc = float((cnt == ref_flat[None, :]).mean())
+        detail[f"dot_t{int(temp)}"] = {
+            "per_op_estimate": est, "mc_success": mc,
+            "lane_accuracy": acc,
+        }
+        if mc < est - 0.05:     # composition contract (+ MC margin)
+            bad += 1
+        rows.append((f"{temp:.0f}C", f"{est:.2e}", round(mc, 4),
+                     round(acc, 4)))
+    _csv("Bit-serial dot: accuracy vs success rate (noisy analog model)",
+         rows, "temp,per_op_estimate,mc_success,lane_accuracy")
+
+    # --- bloom probe/insert fan-in sweep (SS5 many-input AND/OR) ---
+    sweep = charz.workload_fanin_sweep(
+        fanins=(2, 8) if fast else (2, 4, 8, 16),
+        trials=48 if fast else 96, seed=0)
+    rows = []
+    for name, d in sweep.items():
+        detail[name] = d
+        rows.append((name, round(d["estimate"], 4),
+                     round(d["mc_success"], 4)))
+    _csv("Bloom probe/insert program success vs fan-in",
+         rows, "program,estimate,mc_success")
+
+    _p(f"bloom insert host bytes: scheduled {sched_b} vs host-staged "
+       f"{host_b} vs CPU baseline {cpu_b} "
+       f"({100 * (1 - sched_b / host_b):.1f}% below host-staged)")
+    _p(f"workloads gate failures: {bad}")
+    RESULTS["workloads_detail"] = detail
+    RESULTS["workloads_gate_failures"] = bad
+    RESULTS["workloads_bloom_bytes_ratio"] = sched_b / host_b
+    return bad
+
+
 def _json_path(argv) -> str | None:
     if "--json" not in argv:
         return None
     i = argv.index("--json")
     if i + 1 < len(argv) and not argv[i + 1].startswith("-"):
         return argv[i + 1]
-    return "BENCH_pr9.json"
+    return "BENCH_pr10.json"
 
 
 def _sections(fast: bool, mc: bool):
@@ -1133,6 +1274,7 @@ def _sections(fast: bool, mc: bool):
         ("pud_offload", pud_offload_lm),
         ("static", lambda: static_analysis(fast=fast)),
         ("roofline", lambda: roofline(fast=fast)),
+        ("workloads", lambda: workloads_bench(fast=fast)),
     ]
 
 

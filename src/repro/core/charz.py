@@ -503,21 +503,37 @@ def measure_cell_map_not(*, trials: int = 200, row_bits: int = 2048,
 #: headline compiled programs for program-level characterization
 PROGRAMS = ("xor", "maj3", "add4")
 
+#: workload-level compiled programs (bloom dedup + bit-serial dot
+#: product, see :mod:`repro.pud.workloads`): verified and timing-linted
+#: by ``tools/lint_plans.py`` next to ``PROGRAMS``.  Bare names use the
+#: default fan-in / bit width; a trailing integer parameterizes them
+#: (``bloom_probe8`` = 8-hash probe, ``dot_bitserial8`` = K=8 dot).
+WORKLOAD_PROGRAMS = ("bloom_probe", "bloom_insert", "dot_bitserial")
 
-@lru_cache(maxsize=16)
+
+@lru_cache(maxsize=64)
 def get_program(name: str) -> CC.Program:
-    """Compile one of the named characterization programs."""
+    """Compile one of the named characterization/workload programs."""
     if name == "xor":
         return CC.compile_expr(CC.Xor(CC.Var("a"), CC.Var("b")))
     if name == "maj3":
         return CC.compile_expr(CC.Maj(CC.Var("a"), CC.Var("b"), CC.Var("c")))
+    if name.startswith("bloom_probe"):
+        return CC.compile_expr(
+            CC.bloom_probe_exprs(int(name[11:] or 4)))
+    if name.startswith("bloom_insert"):
+        return CC.compile_expr(
+            CC.bloom_insert_exprs(int(name[12:] or 4)))
+    if name.startswith("dot_bitserial"):
+        return CC.compile_expr(CC.dot_exprs(int(name[13:] or 4)))
     if name.startswith("add"):
         return CC.compile_expr(CC.adder_exprs(int(name[3:])))
-    raise ValueError(f"unknown program {name!r} (want one of {PROGRAMS})")
+    raise ValueError(f"unknown program {name!r} (want one of "
+                     f"{PROGRAMS + WORKLOAD_PROGRAMS})")
 
 
-def program_success_estimate(name: str, module: str | None = None,
-                             **kw) -> float:
+def program_success_estimate(name: "str | CC.Program",
+                             module: str | None = None, **kw) -> float:
     """Independent-op estimate: product of per-instruction closed-form
     success rates on the given module.  A lower bound in spirit — real
     programs do better because an op error only corrupts an output bit if
@@ -526,7 +542,8 @@ def program_success_estimate(name: str, module: str | None = None,
     kw = {"mfr": m.manufacturer.value, "density_gb": m.density_gb,
           "die_rev": m.die_rev, "speed_mts": m.speed_mts} | kw
     p = 1.0
-    for i in get_program(name).instrs:
+    prog = get_program(name) if isinstance(name, str) else name
+    for i in prog.instrs:
         if i.op == "not":
             p *= A.not_success(1, **kw)
         elif i.op in ("and", "or", "nand", "nor"):
@@ -659,6 +676,48 @@ def mc_program_success(program: str | CC.Program, *, trials: int = 200,
         ok += sum(int(np.sum(got[k] == want[k])) for k in prog.outputs)
         tot += sum(got[k].size for k in prog.outputs)
     return ok / tot
+
+
+# ---------------------------------------------------------------------------
+# Workload-level Monte-Carlo (compiled application programs)
+# ---------------------------------------------------------------------------
+def mc_workload_success(workload: str, *, fanin: int | None = None,
+                        **kw) -> float:
+    """Program-level MC success of one named workload program
+    (``WORKLOAD_PROGRAMS``): the per-output-bit success of the compiled
+    bloom probe/insert or bit-serial dot program on the noisy simulator.
+    ``fanin`` parameterizes the program (``bloom_probe`` fan-in =
+    n_hashes, ``dot_bitserial`` = K bit positions); remaining kwargs are
+    :func:`mc_program_success`'s (trials, banks, resident, ...)."""
+    if workload not in WORKLOAD_PROGRAMS:
+        raise ValueError(f"unknown workload {workload!r} "
+                         f"(want one of {WORKLOAD_PROGRAMS})")
+    name = workload if fanin is None else f"{workload}{fanin}"
+    return mc_program_success(get_program(name), **kw)
+
+
+def workload_fanin_sweep(workloads=("bloom_probe", "bloom_insert"),
+                         fanins=(2, 4, 8, 16), **kw) -> dict:
+    """Success vs fan-in for the bloom probe/insert programs — paper
+    SS5's many-input AND/OR measured at *workload* fan-ins, with the
+    closed-form independent-op estimate next to each MC number
+    (the ``reliability.plan`` composition contract).
+
+    Returns ``{f"{workload}{fanin}": {"mc_success", "estimate"}}``.
+    """
+    est_kw = {k: kw[k] for k in ("temp_c",) if k in kw}
+    module = kw.get("module")
+    out: dict[str, dict] = {}
+    for wl in workloads:
+        for n in fanins:
+            name = f"{wl}{n}"
+            out[name] = {
+                "mc_success": float(mc_program_success(
+                    get_program(name), **kw)),
+                "estimate": float(program_success_estimate(
+                    name, module=module, **est_kw)),
+            }
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1672,11 +1672,21 @@ def adder_exprs(k: int, a: str = "a", b: str = "b") -> dict[str, Expr]:
     return outs
 
 
-def popcount_exprs(n: int, var: str = "x") -> dict[str, Expr]:
+def popcount_exprs(n: int, var: str = "x",
+                   inputs: "list[Expr] | None" = None) -> dict[str, Expr]:
     """Population count of n single-bit inputs via an adder tree
-    (returns ceil(log2(n+1)) output planes)."""
+    (returns ceil(log2(n+1)) output planes).
+
+    ``inputs`` substitutes arbitrary expressions for the default
+    ``Var(f"{var}{i}")`` leaves — e.g. :func:`dot_exprs` counts pairwise
+    ANDs instead of raw variables."""
+    if inputs is None:
+        inputs = [Var(f"{var}{i}") for i in range(n)]
+    if len(inputs) != n:
+        raise ValueError(f"popcount_exprs: want {n} inputs, "
+                         f"got {len(inputs)}")
     # represent each input as a 1-bit number; reduce pairwise with adders
-    nums: list[list[Expr]] = [[Var(f"{var}{i}")] for i in range(n)]
+    nums: list[list[Expr]] = [[e] for e in inputs]
     tmp = 0
     while len(nums) > 1:
         nxt = []
@@ -1702,6 +1712,40 @@ def popcount_exprs(n: int, var: str = "x") -> dict[str, Expr]:
             nxt.append(nums[-1])
         nums = nxt
     return {f"c{i}": e for i, e in enumerate(nums[0])}
+
+
+def dot_exprs(k: int, a: str = "a", b: str = "b") -> dict[str, Expr]:
+    """Bit-serial binarized dot product: popcount of the pairwise ANDs
+    ``a_i & b_i`` over k bit positions — the in-DRAM twin of the
+    AND+popcount GEMM kernel (``kernels.popcount_gemm(kind="and")``).
+
+    Inputs ``a0..a{k-1}`` / ``b0..b{k-1}``; outputs the count planes
+    ``c0..c{ceil(log2(k+1))-1}`` LSB first.  Every gate (the AND layer
+    and the adder tree it feeds) lowers to the paper's native op set.
+    """
+    return popcount_exprs(
+        k, inputs=[And([Var(f"{a}{i}"), Var(f"{b}{i}")])
+                   for i in range(k)])
+
+
+# ---------------------------------------------------------------------------
+# Workload expression builders (bloom dedup: paper SS5 many-input AND/OR)
+# ---------------------------------------------------------------------------
+def bloom_insert_exprs(n_hashes: int, *, acc: str = "plane",
+                       var: str = "h") -> Expr:
+    """Bulk bloom insert: many-input OR-accumulate of the per-hash key
+    planes ``h0..h{n-1}`` onto the membership plane ``plane`` — one
+    native (n+1)-ary OR up to MAX_FANIN, a balanced tree beyond."""
+    return Or([Var(acc)] + [Var(f"{var}{i}") for i in range(n_hashes)])
+
+
+def bloom_probe_exprs(n_hashes: int, *, var: str = "h") -> Expr:
+    """Bloom membership probe: many-input AND-reduce of the gathered
+    per-hash membership bits ``h0..h{n-1}`` (one bit lane per key)."""
+    if n_hashes < 2:
+        raise ValueError("bloom probe needs n_hashes >= 2 (a 1-hash "
+                         "probe is the gathered bit itself)")
+    return And([Var(f"{var}{i}") for i in range(n_hashes)])
 
 
 def add_bitplanes_ideal(a_planes: np.ndarray, b_planes: np.ndarray) -> np.ndarray:

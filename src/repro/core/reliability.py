@@ -93,7 +93,10 @@ def plan(op: str | None = None, n: int | None = None,
       counts follow whole-program error propagation instead of the
       pessimistic independent-op product — each replica then costs the
       program's native op count.  ``mc_success`` injects a pre-measured
-      success rate (skips the MC).
+      success rate (skips the MC).  Workload-zoo names
+      (``charz.WORKLOAD_PROGRAMS``: ``"bloom_probe"``, ``"bloom_insert"``,
+      ``"dot_bitserial"``, optionally fan-in-suffixed) resolve the same
+      way — :func:`plan_workload` is the spelled-out form.
 
     The vote tree is the same in both modes: in-DRAM MAJ3 cascades whose
     own ops succeed at the closed-form 2-input AND rate of the chosen
@@ -133,6 +136,22 @@ def plan(op: str | None = None, n: int | None = None,
     # vote_success formula, overstating p_final relative to every
     # candidate it had just rejected
     return RedundancyPlan(op_label, n_eff, r, rc, rr, p_raw, pf, ops)
+
+
+def plan_workload(workload: str, target: float = 0.999999, *,
+                  fanin: int | None = None, **kw) -> RedundancyPlan:
+    """Replica choice for one workload program (``bloom_probe`` /
+    ``bloom_insert`` / ``dot_bitserial``, optionally at an explicit
+    fan-in / bit width): :func:`plan` over the compiled program's
+    measured Monte-Carlo success, so e.g. a bloom probe that must not
+    drop inserted keys gets the replica count its *whole-program* error
+    propagation needs, not the per-op pessimism."""
+    from . import charz
+    if workload not in charz.WORKLOAD_PROGRAMS:
+        raise ValueError(f"unknown workload {workload!r} "
+                         f"(want one of {charz.WORKLOAD_PROGRAMS})")
+    name = workload if fanin is None else f"{workload}{fanin}"
+    return plan(target=target, program=name, **kw)
 
 
 def cell_mask(success_map: np.ndarray, threshold: float = 0.999) -> np.ndarray:

@@ -101,3 +101,26 @@ def nary_bitwise_bits(bit_vectors: jax.Array, op: str) -> jax.Array:
     packed = pack_bits(bv)[:, None, :]          # (N, 1, B)
     out = nary_bitwise(packed, op)              # (1, B)
     return unpack_bits(out)[0, :w]
+
+
+def popcount_gemm_bits(x_bits, w_bits, *, kind: str = "and",
+                       interpret: bool | None = None) -> jax.Array:
+    """Binary GEMM over unpacked {0,1} matrices: (M, K) x (N, K) -> (M, N).
+
+    Packs both operands to uint32 (K zero-padded to a multiple of 32)
+    and calls :func:`popcount_gemm`.  ``kind="and"`` is padding-safe as
+    packed (AND with 0 contributes nothing); ``kind="xnor"`` gets the
+    same padding correction the quantized matmul applies (each zero pad
+    bit XNORs to 1 on both sides).  The golden reference the dram
+    workload twin (``pud.workloads.dot_bitserial``) is validated against.
+    """
+    x = jnp.asarray(x_bits, jnp.uint8)
+    w = jnp.asarray(w_bits, jnp.uint8)
+    k = x.shape[1]
+    pk = (-k) % 32
+    xq = pack_bits(jnp.pad(x, ((0, 0), (0, pk))))
+    wq = pack_bits(jnp.pad(w, ((0, 0), (0, pk))))
+    out = popcount_gemm(xq, wq, kind=kind, interpret=interpret)
+    if kind == "xnor" and pk:
+        out = out - pk
+    return out

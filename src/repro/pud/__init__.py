@@ -1,2 +1,9 @@
-"""Framework-side PuD engine: backend dispatch, masks, Bloom dedup."""
+"""Framework-side PuD engine: backend dispatch, masks, Bloom dedup,
+compiled workloads (bloom insert/probe, bit-serial dot products)."""
 from .engine import PudEngine, OffloadReport
+from .workloads import (bloom_insert_program, bloom_probe_program,
+                        dot_bitserial, dot_bitserial_tree, dot_program)
+
+__all__ = ["PudEngine", "OffloadReport", "bloom_insert_program",
+           "bloom_probe_program", "dot_bitserial", "dot_bitserial_tree",
+           "dot_program"]

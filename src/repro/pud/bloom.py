@@ -4,6 +4,14 @@ Sequence-level near-duplicate filtering for the training data pipeline:
 membership bits live in a packed bit-plane; inserts are bulk ORs and probes
 are bulk ANDs — the in-DRAM accumulate/probe pattern the paper's substrate
 provides (OR-accumulate over hash planes, AND-probe for membership).
+
+Both directions now run as *compiled programs* through
+``PudEngine.run_program`` (see :mod:`repro.pud.workloads`): insert is one
+many-input OR over the per-hash key planes (fan-in ``n_hashes + 1``),
+probe one many-input AND over the gathered membership bits (fan-in
+``n_hashes``) — paper SS5's many-input AND/OR exercised at workload
+fan-ins.  On the dram backend the planes chunk onto the trial axis and
+deal across the engine's banks under the scheduled resident policy.
 """
 from __future__ import annotations
 
@@ -13,6 +21,8 @@ import numpy as np
 
 from ..kernels import ops as kops
 from .engine import PudEngine
+from .workloads import (bloom_insert_program, bloom_probe_program,
+                        pack_lanes, unpack_lanes)
 
 
 def _hash_positions(keys: np.ndarray, n_hashes: int, m_bits: int,
@@ -36,25 +46,56 @@ class PudBloomFilter:
     def __init__(self, m_bits: int = 1 << 20, n_hashes: int = 4, *,
                  engine: PudEngine | None = None, seed: int = 0):
         assert m_bits % 32 == 0
+        assert n_hashes >= 2
         self.m_bits = m_bits
         self.n_hashes = n_hashes
         self.seed = seed
         self.engine = engine or PudEngine("jnp")
         self.plane = jnp.zeros((1, m_bits // 32), jnp.uint32)
 
-    def _key_plane(self, keys: np.ndarray) -> jax.Array:
+    def _hash_planes(self, keys: np.ndarray) -> dict[str, jax.Array]:
+        """One (1, m_bits/32) plane per hash function: bit ``pos(k, h)``
+        set for every key k of the batch."""
         pos = _hash_positions(keys, self.n_hashes, self.m_bits, self.seed)
-        bits = np.zeros(self.m_bits, dtype=np.uint8)
-        bits[pos.reshape(-1)] = 1
-        return kops.pack_bits(jnp.asarray(bits[None, :]))
+        planes = {}
+        for h in range(self.n_hashes):
+            bits = np.zeros(self.m_bits, dtype=np.uint8)
+            bits[pos[:, h]] = 1
+            planes[f"h{h}"] = pack_lanes(bits)
+        return planes
 
     def insert(self, keys: np.ndarray) -> None:
-        """Bulk OR-accumulate the hash plane of a batch of keys."""
-        kp = self._key_plane(np.asarray(keys, dtype=np.uint64))
-        self.plane = self.engine.nary(jnp.stack([self.plane, kp]), "or")
+        """Bulk OR-accumulate the per-hash planes of a batch of keys:
+        one compiled many-input OR through ``engine.run_program``."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        if keys.size == 0:
+            return
+        planes = {"plane": self.plane} | self._hash_planes(keys)
+        out = self.engine.run_program(
+            bloom_insert_program(self.n_hashes), planes)
+        self.plane = out["out"]
+
+    def probe(self, keys: np.ndarray) -> np.ndarray:
+        """-> bool per key via the compiled many-input AND-reduce.
+
+        The per-hash membership bits are gathered from the plane (an
+        address-stream read) into one bit lane per key, then the fan-in
+        ``n_hashes`` AND runs on the engine's backend — in-DRAM on the
+        dram backend, where noise makes membership bits fallible."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        if keys.size == 0:
+            return np.zeros(0, dtype=bool)
+        pos = _hash_positions(keys, self.n_hashes, self.m_bits, self.seed)
+        bits = np.asarray(kops.unpack_bits(self.plane))[0]
+        gathered = {f"h{h}": pack_lanes(bits[pos[:, h]])
+                    for h in range(self.n_hashes)}
+        out = self.engine.run_program(
+            bloom_probe_program(self.n_hashes), gathered)
+        return unpack_lanes(out["out"], len(keys)).astype(bool)
 
     def contains(self, keys: np.ndarray) -> np.ndarray:
-        """-> bool per key: all n_hashes bits set (AND-probe)."""
+        """-> bool per key: all n_hashes bits set (host-side AND-probe;
+        :meth:`probe` is the engine-compiled twin)."""
         keys = np.asarray(keys, dtype=np.uint64)
         pos = _hash_positions(keys, self.n_hashes, self.m_bits, self.seed)
         bits = np.asarray(kops.unpack_bits(self.plane))[0]
@@ -62,10 +103,12 @@ class PudBloomFilter:
 
     def filter_new(self, keys: np.ndarray) -> np.ndarray:
         """-> mask of keys NOT already present; inserts them."""
+        keys = np.asarray(keys)
         seen = self.contains(keys)
-        self.insert(np.asarray(keys)[~seen] if (~seen).any()
-                    else np.asarray(keys)[:0])
-        return ~seen
+        new = ~seen
+        if new.any():   # all-duplicate batches issue zero engine ops
+            self.insert(keys[new])
+        return new
 
     @property
     def fill_fraction(self) -> float:

@@ -194,6 +194,15 @@ class OffloadReport:
     def bus_bytes_avoided(self) -> int:
         return self.cpu.bus_bytes - self.dram.bus_bytes
 
+    @property
+    def host_bytes_moved(self) -> int:
+        """Bytes that crossed the host DDR bus on the in-DRAM side
+        (operand/reference staging WRs + result RDs) — measured from the
+        command log on the dram backend, modeled elsewhere.  The
+        workload-level comparison number: the CPU baseline moves
+        ``cpu.bus_bytes`` for the same logical work."""
+        return self.dram.bus_bytes
+
     def summary(self) -> dict:
         return {
             "ops": self.ops,
@@ -204,6 +213,7 @@ class OffloadReport:
             "cpu_energy_uj": self.cpu.energy_pj / 1e6,
             "energy_saving": self.energy_saving,
             "bus_bytes_avoided": self.bus_bytes_avoided,
+            "host_bytes_moved": self.host_bytes_moved,
             "rowclones": self.rowclones,
             "staged_bytes": self.staged_bytes,
             "makespan_ns": self.makespan_ns,

@@ -1,0 +1,193 @@
+"""Real workloads lowered to compiled Programs on the PuD substrate.
+
+Two applications ride the whole stack (compile -> verify -> schedule ->
+fuse -> rank-legal timing) instead of microbenchmarks:
+
+* **Bloom dedup** — bulk insert is a many-input OR-accumulate of the
+  per-hash key planes onto the membership plane, probe a many-input
+  AND-reduce of the gathered per-hash membership bits (paper SS5's
+  many-input AND/OR, fan-in = ``n_hashes``).  The compiled programs are
+  built here (:func:`bloom_insert_program` / :func:`bloom_probe_program`)
+  and dispatched by :class:`~repro.pud.bloom.PudBloomFilter` through
+  ``PudEngine.run_program`` — chunk-batched onto the trial axis and dealt
+  across the engine's ``BankArray``.
+* **Bit-serial binarized dot product** — ``y[m, n] =
+  popcount(x[m] & w[n])`` compiles to an AND layer feeding an in-DRAM
+  popcount adder tree (``compiler.dot_exprs``): one bit lane per output
+  element, one program input pair per bit position.  :func:`dot_bitserial`
+  runs the single-program form through an engine (the dram twin of
+  ``kernels.popcount_gemm(kind="and")``); :func:`dot_bitserial_tree`
+  shards the bit positions across a :class:`BankArray` and joins the
+  per-bank partial counts with the cross-bank ``tree_reduce_add`` ripple
+  tree (``compiler.adder_exprs``).
+
+Both paths are bit-identical to the jnp references at zero noise and
+degrade measurably with the analog error model on — the accuracy-vs-
+success-rate contract `charz.mc_workload_success` / `reliability.plan`
+quantify.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import compiler as CC
+from ..core.bankarray import BankArray
+from ..core.device import SubarrayGeometry
+from ..core.policy import ResidentPolicy, coerce_resident
+from ..kernels import ops as kops
+from .engine import PudEngine
+
+
+# ---------------------------------------------------------------------------
+# Compiled workload programs
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=32)
+def bloom_insert_program(n_hashes: int) -> CC.Program:
+    """OR-accumulate of ``n_hashes`` hash planes onto ``plane``."""
+    return CC.compile_expr(CC.bloom_insert_exprs(n_hashes))
+
+
+@lru_cache(maxsize=32)
+def bloom_probe_program(n_hashes: int) -> CC.Program:
+    """AND-reduce of ``n_hashes`` gathered membership-bit planes."""
+    return CC.compile_expr(CC.bloom_probe_exprs(n_hashes))
+
+
+@lru_cache(maxsize=32)
+def dot_program(k: int) -> CC.Program:
+    """AND + popcount-reduce over k bit positions (``compiler.dot_exprs``)."""
+    return CC.compile_expr(CC.dot_exprs(k))
+
+
+# ---------------------------------------------------------------------------
+# Lane packing (one logical bit lane per workload element)
+# ---------------------------------------------------------------------------
+def pack_lanes(bits: np.ndarray) -> jax.Array:
+    """(L,) {0,1} lane vector -> (1, ceil(L/32)) packed uint32 plane
+    (zero-padded; every workload trims back to L on unpack)."""
+    bits = np.asarray(bits, dtype=np.uint8).reshape(-1)
+    pad = (-len(bits)) % 32
+    if pad:
+        bits = np.concatenate([bits, np.zeros(pad, np.uint8)])
+    return kops.pack_bits(jnp.asarray(bits[None, :]))
+
+
+def unpack_lanes(plane: jax.Array, n: int) -> np.ndarray:
+    """(1, C) packed plane -> first n lane bits as uint8."""
+    return np.asarray(kops.unpack_bits(plane)).reshape(-1)[:n]
+
+
+def _counts_from_planes(outs: dict, lanes: int) -> np.ndarray:
+    """{c0..c{L-1}: (1, C) planes} -> per-lane integer counts."""
+    cnt = np.zeros(lanes, dtype=np.int64)
+    for i in range(len(outs)):
+        cnt += unpack_lanes(outs[f"c{i}"], lanes).astype(np.int64) << i
+    return cnt
+
+
+# ---------------------------------------------------------------------------
+# Bit-serial binarized dot product (dram twin of popcount_gemm)
+# ---------------------------------------------------------------------------
+def dot_lane_planes(x_bits: np.ndarray, w_bits: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Broadcast (M, K) x and (N, K) w onto M*N output lanes.
+
+    Returns ``(a, b)``, each ``(K, M*N)`` uint8: lane ``m*N + n`` of bit
+    position i holds ``x[m, i]`` / ``w[n, i]`` — the operand layout the
+    AND layer of ``dot_exprs`` consumes.
+    """
+    x = np.asarray(x_bits, dtype=np.uint8)
+    w = np.asarray(w_bits, dtype=np.uint8)
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[1]:
+        raise ValueError(f"want (M, K) x and (N, K) w, got "
+                         f"{x.shape} and {w.shape}")
+    m, _k = x.shape
+    n, _ = w.shape
+    a = np.repeat(x.T, n, axis=1)           # (K, M*N): lane -> x[m, i]
+    b = np.tile(w.T, (1, m))                # (K, M*N): lane -> w[n, i]
+    return a, b
+
+
+def dot_bitserial(x_bits: np.ndarray, w_bits: np.ndarray,
+                  engine: PudEngine | None = None) -> np.ndarray:
+    """Binarized dot products via one compiled AND+popcount program.
+
+    ``x_bits`` (M, K) and ``w_bits`` (N, K) are {0,1} matrices; returns
+    the (M, N) int32 counts ``popcount(x[m] & w[n])`` — exactly
+    ``kernels.popcount_gemm(pack(x), pack(w), kind="and")`` at zero
+    noise.  The M*N output elements ride the engine's plane/trial axis:
+    on the dram backend the program executes chunk-blocked through the
+    scheduled resident executor, dealt across the engine's banks.
+    """
+    eng = engine or PudEngine("jnp")
+    a, b = dot_lane_planes(x_bits, w_bits)
+    k, lanes = a.shape
+    planes = {f"a{i}": pack_lanes(a[i]) for i in range(k)} \
+        | {f"b{i}": pack_lanes(b[i]) for i in range(k)}
+    outs = eng.run_program(dot_program(k), planes)
+    m = np.asarray(x_bits).shape[0]
+    return _counts_from_planes(outs, lanes).reshape(
+        m, lanes // m).astype(np.int32)
+
+
+def dot_bitserial_tree(x_bits: np.ndarray, w_bits: np.ndarray, *,
+                       banks: int = 2, module=None, seed: int = 0,
+                       noisy: bool = False, row_bits: int | None = None,
+                       policy: "ResidentPolicy | None" = None
+                       ) -> tuple[np.ndarray, BankArray]:
+    """Cross-bank form: shard the K bit positions over ``banks``.
+
+    Each bank runs its own compiled AND+popcount program over its slice
+    of bit positions (round-robin ``BankArray.shard``), then the partial
+    count planes join through :meth:`BankArray.tree_reduce_add` — the
+    host-hopped ripple-adder reduction tree (``compiler.adder_exprs``).
+    Under the scheduled policy the planner search runs once on bank 0
+    and sibling banks replay the frozen decisions.
+
+    Returns ``(counts (M, N) int32, array)`` — the array is handed back
+    so callers can inspect per-bank logs / makespans.
+    """
+    policy = coerce_resident(policy, where="dot_bitserial_tree",
+                             default=ResidentPolicy.SCHEDULED)
+    a, b = dot_lane_planes(x_bits, w_bits)
+    k, lanes = a.shape
+    w = (row_bits or SubarrayGeometry().row_bits) // 2
+    t = -(-lanes // w)
+    pad = t * w - lanes
+    if pad:
+        z = np.zeros((k, pad), np.uint8)
+        a = np.concatenate([a, z], axis=1)
+        b = np.concatenate([b, z], axis=1)
+    lane_shape = (t, w) if t > 1 else (w,)
+    a = a.reshape((k,) + lane_shape)
+    b = b.reshape((k,) + lane_shape)
+    arr = BankArray(module, banks=banks, seed=seed, row_bits=row_bits,
+                    error_model="analog" if noisy else "ideal",
+                    trials=t if t > 1 else None, track_unshared=False)
+    partial: list[np.ndarray] = []
+    for bk, idx in enumerate(arr.shard(k)):
+        if not idx:
+            partial.append(np.zeros((0,) + lane_shape, np.uint8))
+            continue
+        prog = dot_program(len(idx))
+        ins = {f"a{j}": a[i] for j, i in enumerate(idx)} \
+            | {f"b{j}": b[i] for j, i in enumerate(idx)}
+        plan = None
+        if policy is ResidentPolicy.SCHEDULED:
+            fixed = arr.schedule_decisions(prog, trials=arr.trials)
+            plan = CC.schedule_resident(prog, arr.isa(bk),
+                                        policy="scheduled",
+                                        _fixed=None if bk == 0 else fixed)
+        out = CC.run_sim(prog, ins, arr.isa(bk), resident=policy,
+                         plan=plan)
+        partial.append(np.stack([np.asarray(out[f"c{i}"])
+                                 for i in range(len(out))]))
+    planes, _bank = arr.tree_reduce_add(partial, policy=policy)
+    cnt = sum(planes[i].astype(np.int64).reshape(-1) << i
+              for i in range(planes.shape[0]))[:lanes]
+    m = np.asarray(x_bits).shape[0]
+    return cnt.reshape(m, lanes // m).astype(np.int32), arr

@@ -168,6 +168,27 @@ def test_bloom_filter_new():
     assert not bf.filter_new(a).any()
 
 
+def test_bloom_filter_new_all_dup_zero_engine_ops():
+    """The all-seen path must early-return: an all-duplicate batch pays
+    no key-plane build and no engine ops (the old code issued a full
+    engine round-trip for an empty batch)."""
+    bf = PudBloomFilter(m_bits=1 << 14, n_hashes=3)
+    a = np.asarray([7, 8, 9], dtype=np.uint64)
+    bf.insert(a)
+    ops0 = bf.engine.report.ops
+    plane0 = np.asarray(bf.plane).copy()
+    assert not bf.filter_new(a).any()
+    assert bf.engine.report.ops == ops0
+    assert np.array_equal(np.asarray(bf.plane), plane0)
+
+
+def test_bloom_empty_insert_is_noop():
+    bf = PudBloomFilter(m_bits=1 << 14, n_hashes=3)
+    bf.insert(np.zeros(0, dtype=np.uint64))
+    assert bf.engine.report.ops == 0
+    assert bf.fill_fraction == 0.0
+
+
 # ---------------------------------------------------------------------------
 # binary (1-bit) linears on the popcount-GEMM path
 # ---------------------------------------------------------------------------

@@ -1,0 +1,212 @@
+"""End-to-end workload harness: bloom dedup + bit-serial dot products.
+
+Golden parity (dram backend bit-identical to the jnp references at zero
+noise), property tests over random key sets / weight matrices, and the
+accuracy-vs-success-rate contract: with the analog noise model on, the
+workload-level error rate is bounded by the charz per-op success rates
+composed over the program's op count (the ``reliability.plan`` contract).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import charz
+from repro.core import reliability as R
+from repro.kernels import ops as kops
+from repro.pud import workloads as W
+from repro.pud.bloom import PudBloomFilter
+from repro.pud.engine import PudEngine
+
+RNG = np.random.default_rng(42)
+
+
+def _dram_engine(**kw):
+    return PudEngine("dram", noisy=False, banks=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: bloom on dram == jnp at zero noise
+# ---------------------------------------------------------------------------
+def test_bloom_dram_bit_identical_to_jnp():
+    keys = RNG.integers(0, 2 ** 60, 200).astype(np.uint64)
+    probe = np.arange(500, dtype=np.uint64)
+    bf_d = PudBloomFilter(m_bits=1 << 14, n_hashes=4,
+                          engine=_dram_engine())
+    bf_j = PudBloomFilter(m_bits=1 << 14, n_hashes=4)
+    for lo in (0, 100):          # two insert batches (session chaining)
+        bf_d.insert(keys[lo:lo + 100])
+        bf_j.insert(keys[lo:lo + 100])
+    assert np.array_equal(np.asarray(bf_d.plane), np.asarray(bf_j.plane))
+    assert np.array_equal(bf_d.probe(probe), bf_j.probe(probe))
+    # the engine-compiled AND-probe equals the host-side gather-probe
+    assert np.array_equal(bf_d.probe(probe), bf_d.contains(probe))
+    assert bf_d.probe(keys).all()            # no false negatives
+    assert bf_d.engine.report.ops > 0        # really went through the engine
+    assert bf_d.engine.report.host_bytes_moved > 0
+
+
+def test_bloom_insert_is_many_input_or():
+    """The insert program is ONE native OR at fan-in n_hashes + 1."""
+    prog = W.bloom_insert_program(4)
+    assert prog.stats() == {"input": 5, "or": 1}
+    (instr,) = [i for i in prog.instrs if i.op == "or"]
+    assert len(instr.srcs) == 5
+    prog = W.bloom_probe_program(4)
+    assert prog.stats() == {"input": 4, "and": 1}
+
+
+@given(keys=st.lists(st.integers(0, 2 ** 60), min_size=1, max_size=40,
+                     unique=True),
+       m_bits=st.sampled_from([1 << 10, 1 << 12]),
+       n_hashes=st.integers(2, 5))
+@settings(max_examples=15, deadline=None)
+def test_bloom_no_false_negatives_dram(keys, m_bits, n_hashes):
+    """Zero-noise FN rate is 0 across random key sets and geometries."""
+    bf = PudBloomFilter(m_bits=m_bits, n_hashes=n_hashes,
+                        engine=_ENGINE)
+    arr = np.asarray(keys, dtype=np.uint64)
+    bf.insert(arr)
+    assert bf.probe(arr).all()
+    assert bf.contains(arr).all()
+
+
+#: one shared zero-noise dram engine across hypothesis examples (engine
+#: construction builds a BankArray; results are exact so sharing is safe)
+_ENGINE = _dram_engine()
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: bit-serial dot product == popcount_gemm
+# ---------------------------------------------------------------------------
+@given(m=st.integers(1, 6), n=st.integers(1, 6), k=st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_dot_bitserial_jnp_matches_popcount_gemm(m, n, k):
+    x = RNG.integers(0, 2, (m, k), dtype=np.uint8)
+    w = RNG.integers(0, 2, (n, k), dtype=np.uint8)
+    got = W.dot_bitserial(x, w)
+    assert np.array_equal(got, np.asarray(kops.popcount_gemm_bits(x, w)))
+
+
+def test_dot_bitserial_dram_matches_popcount_gemm():
+    x = RNG.integers(0, 2, (5, 8), dtype=np.uint8)
+    w = RNG.integers(0, 2, (7, 8), dtype=np.uint8)
+    eng = _dram_engine()
+    got = W.dot_bitserial(x, w, eng)
+    ref = np.asarray(kops.popcount_gemm_bits(x, w))
+    assert np.array_equal(got, ref)
+    # and the Pallas kernel twin agrees with the same reference
+    pk = (-8) % 32
+    xq = kops.pack_bits(np.pad(x, ((0, 0), (0, pk))))
+    wq = kops.pack_bits(np.pad(w, ((0, 0), (0, pk))))
+    assert np.array_equal(np.asarray(kops.popcount_gemm(xq, wq)), ref)
+    assert eng.report.ops > 0
+
+
+def test_dot_bitserial_tree_matches_reference():
+    """Cross-bank form: K sharded over banks, partial counts joined by
+    tree_reduce_add — arithmetically exact at zero noise."""
+    x = RNG.integers(0, 2, (4, 9), dtype=np.uint8)
+    w = RNG.integers(0, 2, (5, 9), dtype=np.uint8)
+    got, arr = W.dot_bitserial_tree(x, w, banks=3, row_bits=2048)
+    assert np.array_equal(got, np.asarray(kops.popcount_gemm_bits(x, w)))
+    assert arr.banks == 3
+    assert arr.makespan_ns() > 0
+
+
+def test_popcount_gemm_bits_xnor_padding():
+    x = RNG.integers(0, 2, (3, 10), dtype=np.uint8)
+    w = RNG.integers(0, 2, (4, 10), dtype=np.uint8)
+    pm = np.where(x[:, None, :] == w[None, :, :], 1, -1).sum(-1)
+    assert np.array_equal(np.asarray(
+        kops.popcount_gemm_bits(x, w, kind="xnor")), pm)
+
+
+# ---------------------------------------------------------------------------
+# Workload zoo / reliability plumbing
+# ---------------------------------------------------------------------------
+def test_workload_zoo_programs_compile_and_verify():
+    from repro import analysis
+    for name in charz.WORKLOAD_PROGRAMS:
+        prog = charz.get_program(name)
+        assert not analysis.verify_program(prog)
+        est = charz.program_success_estimate(name)
+        assert 0.0 < est <= 1.0
+        # parametrized spellings resolve too
+        assert charz.get_program(f"{name}8").stats()
+
+
+def test_program_success_estimate_accepts_compiled_program():
+    prog = charz.get_program("bloom_probe")
+    assert charz.program_success_estimate(prog) == \
+        charz.program_success_estimate("bloom_probe")
+
+
+def test_plan_workload_replica_choice():
+    pl = R.plan_workload("bloom_probe", target=0.999, mc_success=0.97,
+                         noisy_vote=False)
+    assert pl.op.startswith("program:bloom_probe")
+    assert pl.replicas >= 3 and pl.replicas % 2 == 1
+    assert pl.p_final >= 0.999
+    with pytest.raises(ValueError):
+        R.plan_workload("nope")
+    with pytest.raises(ValueError):
+        charz.mc_workload_success("nope")
+
+
+# ---------------------------------------------------------------------------
+# Accuracy vs success rate (analog noise on) — nightly lane
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_workload_success_bounded_by_op_composition(mc_trials):
+    """The reliability.plan contract: measured whole-program success is
+    no worse than the independent-op composition of the charz per-op
+    success rates (errors can only cancel or fail to propagate)."""
+    tr = mc_trials(120)
+    for name in ("bloom_probe", "dot_bitserial"):
+        est = charz.program_success_estimate(name)
+        mc = charz.mc_workload_success(name, trials=tr, seed=0)
+        assert mc >= est - 0.05, (name, mc, est)
+        assert mc < 1.0, (name, mc)   # degrades measurably under noise
+
+
+@pytest.mark.slow
+def test_bloom_probe_success_monotone_in_fanin(mc_trials):
+    """Obs. 11 at workload level: AND success improves with fan-in, so
+    the wide probe cannot be (much) worse than the narrow one."""
+    tr = mc_trials(120)
+    s2 = charz.mc_workload_success("bloom_probe", fanin=2, trials=tr,
+                                   seed=0)
+    s16 = charz.mc_workload_success("bloom_probe", fanin=16, trials=tr,
+                                    seed=0)
+    assert s16 >= s2 - 0.02, (s2, s16)
+
+
+@pytest.mark.slow
+def test_dot_noisy_error_bounded_and_nonzero(mc_trials):
+    """End-to-end noisy dot product: per-output-bit error rate on the
+    noisy dram engine stays within the composed per-op bound, and is
+    nonzero (the analog model must degrade the workload measurably)."""
+    reps = max(2, mc_trials(6, 3))
+    est = charz.program_success_estimate("dot_bitserial8")
+    errs = tot = 0
+    for rep in range(reps):
+        rng = np.random.default_rng(100 + rep)
+        x = rng.integers(0, 2, (8, 8), dtype=np.uint8)
+        w = rng.integers(0, 2, (8, 8), dtype=np.uint8)
+        eng = PudEngine("dram", noisy=True, seed=rep, banks=2)
+        a, b = W.dot_lane_planes(x, w)
+        k, lanes = a.shape
+        planes = {f"a{i}": W.pack_lanes(a[i]) for i in range(k)} \
+            | {f"b{i}": W.pack_lanes(b[i]) for i in range(k)}
+        prog = W.dot_program(k)
+        got = eng.run_program(prog, planes)
+        ref = np.asarray(kops.popcount_gemm_bits(x, w)).reshape(-1)
+        for i in range(len(got)):
+            gb = W.unpack_lanes(got[f"c{i}"], lanes)
+            wb = ((ref >> i) & 1).astype(np.uint8)
+            errs += int((gb != wb).sum())
+            tot += lanes
+    rate = errs / tot
+    assert rate > 0.0, "analog noise produced a perfect dot product"
+    # composed bound + generous sampling margin: P(bit wrong) <= 1 - est
+    assert rate <= (1 - est) + 0.10, (rate, est)

@@ -47,10 +47,15 @@ POLICIES = ("greedy", "scheduled")
 
 
 def lint_zoo_plans() -> int:
-    """Verify every zoo program x policy plan; return # findings."""
+    """Verify every zoo program x policy plan; return # findings.
+
+    The zoo covers the characterization programs (``charz.PROGRAMS``)
+    and the compiled workload programs (``charz.WORKLOAD_PROGRAMS``:
+    bloom probe/insert, bit-serial dot) — applications must verify as
+    clean as microbenchmarks."""
     n_findings = 0
     isa = PudIsa(BankSim(get_module(), seed=0, trials=4))
-    for name in charz.PROGRAMS:
+    for name in charz.PROGRAMS + charz.WORKLOAD_PROGRAMS:
         prog = charz.get_program(name)
         prog_findings = analysis.verify_program(prog)
         for f in prog_findings:
@@ -70,18 +75,23 @@ def lint_zoo_plans() -> int:
 
 
 def _engine_workload(fused: bool) -> PudEngine:
-    """A small 2-bank workload exercised end-to-end (loop or fused)."""
+    """A small 2-bank workload exercised end-to-end (loop or fused):
+    the xor microbenchmark plus the two compiled application programs
+    (bloom probe, bit-serial dot) so the timing lint covers the
+    command streams real workloads issue."""
     import jax.numpy as jnp
     eng = PudEngine("dram", banks=2, fused=fused,
                     resident=ResidentPolicy.HOST if fused
                     else ResidentPolicy.SCHEDULED,
                     verify=False)
     rng = np.random.default_rng(7)
-    prog = charz.get_program("xor")
-    ins = {k: jnp.asarray(np.asarray(
-        rng.integers(0, 2**32, (4, 4), dtype=np.uint32)))
-        for k in ("a", "b")}
-    eng.run_program(prog, ins)
+    for name in ("xor",) + charz.WORKLOAD_PROGRAMS:
+        prog = charz.get_program(name)
+        names = sorted({i.name for i in prog.instrs if i.op == "input"})
+        ins = {k: jnp.asarray(np.asarray(
+            rng.integers(0, 2**32, (4, 4), dtype=np.uint32)))
+            for k in names}
+        eng.run_program(prog, ins)
     return eng
 
 
